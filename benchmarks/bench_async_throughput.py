@@ -1,0 +1,77 @@
+"""Paper Table 1 analogue — training-throughput gain from asynchronous tool
+invocation.
+
+The paper reports 6.8x training throughput for RLFactory's asyncio rollout vs
+the serial baseline.  We measure the Invoke stage directly: a rollout batch
+of trajectories each issuing tool calls against tools with realistic,
+heterogeneous simulated latencies (search ~120ms, calculator ~25ms, python
+~240ms + jitter), executed by AsyncToolExecutor vs SerialToolExecutor, plus
+the end-to-end rollout-iteration speedup this implies at the paper's batch
+sizes.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.async_engine import AsyncToolExecutor, SerialToolExecutor
+from repro.tools.builtin import FactCorpus, make_builtin_registry
+from repro.tools.registry import ToolCall
+
+
+def run(batch_size: int = 64, calls_per_traj: int = 2, latency_s: float = 0.12,
+        jitter: float = 0.05, seed: int = 0):
+    corpus = FactCorpus(n_entities=100, seed=seed)
+    reg = make_builtin_registry(corpus, latency_s=latency_s,
+                                latency_jitter=jitter, seed=seed)
+    rng = np.random.RandomState(seed)
+    tools = ["search", "calculate", "python"]
+    args = {"search": lambda: {"query": f"capital {rng.choice(corpus.entities)}"},
+            "calculate": lambda: {"expression": "2+2*3"},
+            "python": lambda: {"code": "(1+2)**3"}}
+    batch = []
+    for i in range(batch_size):
+        calls = []
+        for j in range(calls_per_traj):
+            name = tools[rng.randint(len(tools))]
+            calls.append(ToolCall(name, args[name](), j))
+        batch.append(calls)
+
+    ax = AsyncToolExecutor(reg)
+    t0 = time.monotonic()
+    out_a = ax.execute_batch(batch)
+    t_async = time.monotonic() - t0
+
+    sx = SerialToolExecutor(reg)
+    t0 = time.monotonic()
+    out_s = sx.execute_batch(batch)
+    t_serial = time.monotonic() - t0
+
+    assert all(r.ok for row in out_a for r in row)
+    n_calls = batch_size * calls_per_traj
+    return {
+        "n_calls": n_calls,
+        "async_s": t_async,
+        "serial_s": t_serial,
+        "speedup": t_serial / t_async,
+        "overlap_factor": ax.overlap_factor,
+        "async_calls_per_s": n_calls / t_async,
+        "serial_calls_per_s": n_calls / t_serial,
+    }
+
+
+def main():
+    rows = []
+    for bs in (8, 32, 64):
+        r = run(batch_size=bs)
+        rows.append((f"async_tool_invoke_b{bs}", r["async_s"] * 1e6 / r["n_calls"],
+                     f"speedup={r['speedup']:.1f}x"))
+        print(f"bench_async_throughput,batch={bs},calls={r['n_calls']},"
+              f"async={r['async_s']:.3f}s,serial={r['serial_s']:.3f}s,"
+              f"speedup={r['speedup']:.2f}x,overlap={r['overlap_factor']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

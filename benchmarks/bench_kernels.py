@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness-oriented
+timing; real TPU timing comes from the roofline analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ssd_scan import ssd_scan_fwd
+from repro.kernels.token_logprob import fused_token_logprob_fwd
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.monotonic()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.monotonic() - t0) / reps
+
+
+def main():
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    t_k = _time(lambda: flash_attention_fwd(q, k, v, block_q=64, block_k=64))
+    t_r = _time(lambda: R.attention_ref(q, k, v))
+    rows.append(("flash_attention_256", t_k * 1e6, f"ref={t_r*1e6:.0f}us"))
+
+    x = jax.random.normal(ks[0], (1, 128, 8, 64))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 128, 8)))
+    A = jax.random.normal(ks[2], (8,)) * 0.5
+    Bm = jax.random.normal(ks[3], (1, 128, 1, 128)) * 0.3
+    Cm = jax.random.normal(ks[4], (1, 128, 1, 128)) * 0.3
+    t_k = _time(lambda: ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=64))
+    t_r = _time(lambda: R.ssd_ref(x, dt, A, Bm, Cm))
+    rows.append(("ssd_scan_128", t_k * 1e6, f"ref={t_r*1e6:.0f}us"))
+
+    logits = jax.random.normal(ks[0], (2, 64, 4096))
+    labels = jax.random.randint(ks[1], (2, 64), 0, 4096)
+    t_k = _time(lambda: fused_token_logprob_fwd(logits, labels))
+    t_r = _time(lambda: R.token_logprob_ref(logits, labels))
+    rows.append(("fused_token_logprob", t_k * 1e6, f"ref={t_r*1e6:.0f}us"))
+
+    for name, us, derived in rows:
+        print(f"bench_kernels,{name},{us:.0f}us,{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

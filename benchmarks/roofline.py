@@ -1,0 +1,84 @@
+"""Roofline table from the dry-run artifacts (brief §ROOFLINE ANALYSIS).
+
+Reads results/dryrun/*.json and prints, per (arch x shape x mesh x variant):
+the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and
+HBM per chip.  Also emits the markdown table embedded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+RESULTS_DIR = os.path.join(os.getcwd(), "results", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["dbrx-132b", "pixtral-12b", "seamless-m4t-medium", "qwen3-32b",
+              "deepseek-v2-236b", "qwen2-7b", "mamba2-130m", "zamba2-2.7b",
+              "codeqwen1.5-7b", "internlm2-20b"]
+
+
+def load_results(mesh="16x16", variant="baseline"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("mesh") != mesh or d.get("variant", "baseline") != variant:
+            continue
+        rows.append(d)
+    key = lambda d: (ARCH_ORDER.index(d["arch"]) if d["arch"] in ARCH_ORDER
+                     else 99, SHAPE_ORDER.index(d["shape"]))
+    return sorted(rows, key=key)
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def markdown_table(rows):
+    out = ["| arch | shape | t_compute | t_memory | t_collective | dominant | "
+           "useful_flops | HBM/chip |",
+           "|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d["status"] == "skipped":
+            out.append(f"| {d['arch']} | {d['shape']} | - | - | - | "
+                       f"skipped ({d['reason'][:40]}...) | - | - |")
+            continue
+        if d["status"] != "ok":
+            out.append(f"| {d['arch']} | {d['shape']} | - | - | - | "
+                       f"ERROR | - | - |")
+            continue
+        r = d["roofline"]
+        ratio = d.get("useful_flop_ratio")
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"**{r['dominant']}** | "
+            f"{(f'{ratio:.2f}' if ratio else '-')} | "
+            f"{d['hbm_gb_per_chip']:.2f} GB |")
+    return "\n".join(out)
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    variant = sys.argv[2] if len(sys.argv) > 2 else "baseline"
+    rows = load_results(mesh, variant)
+    if not rows:
+        print(f"roofline,no_results_for_{mesh}_{variant}")
+        return []
+    print(markdown_table(rows))
+    ok = [d for d in rows if d["status"] == "ok"]
+    print(f"\nroofline,combos_ok={len(ok)},combos_total={len(rows)},"
+          f"mesh={mesh},variant={variant}")
+    return [("roofline_table", 0.0, f"{len(ok)}/{len(rows)} ok")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Benchmark harness — one entry per paper table/figure plus the roofline
+table.  Prints ``name,us_per_call,derived`` CSV lines (and richer per-bench
+output above them)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_async_throughput, bench_kernels,
+                            bench_training_curve, roofline)
+    all_rows = []
+    for mod, label in ((bench_async_throughput, "table1_async_throughput"),
+                       (bench_kernels, "kernels"),
+                       (bench_training_curve, "fig5_training_curve"),
+                       (roofline, "roofline")):
+        print(f"===== {label} =====", flush=True)
+        t0 = time.monotonic()
+        try:
+            rows = mod.main() or []
+        except Exception as e:  # a missing artifact must not kill the harness
+            print(f"{label},ERROR,{type(e).__name__}: {e}")
+            rows = []
+        all_rows.extend(rows)
+        print(f"({label} took {time.monotonic()-t0:.0f}s)", flush=True)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from artifacts:
+§Dry-run status table, §Roofline baseline table, and the async/training
+results, leaving the hand-written analysis intact (between markers).
+
+    PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import load_results, markdown_table, fmt_s
+
+EXP = os.path.join(os.getcwd(), "EXPERIMENTS.md")
+
+
+def dryrun_status_table() -> str:
+    rows = []
+    for path in sorted(glob.glob("results/dryrun/*_baseline.json")):
+        with open(path) as f:
+            d = json.load(f)
+        rows.append(d)
+    if not rows:
+        return "_no artifacts yet_"
+    by_mesh = {}
+    for d in rows:
+        by_mesh.setdefault(d["mesh"], []).append(d)
+    out = []
+    for mesh in sorted(by_mesh):
+        ds = by_mesh[mesh]
+        ok = sum(1 for d in ds if d["status"] == "ok")
+        sk = sum(1 for d in ds if d["status"] == "skipped")
+        er = sum(1 for d in ds if d["status"] == "error")
+        out.append(f"**{mesh}**: {ok} ok, {sk} skipped (documented), "
+                   f"{er} errors of {len(ds)} combos.")
+        if er:
+            for d in ds:
+                if d["status"] == "error":
+                    out.append(f"  - ERROR {d['arch']} x {d['shape']}: "
+                               f"{d.get('error', '?')[:200]}")
+    # memory + compile time summary (single-pod)
+    sp = [d for d in by_mesh.get("16x16", []) if d["status"] == "ok"]
+    if sp:
+        worst = max(sp, key=lambda d: d["hbm_gb_per_chip"])
+        out.append(f"\nWorst HBM/chip (16x16): {worst['hbm_gb_per_chip']:.1f} GB "
+                   f"({worst['arch']} x {worst['shape']}); "
+                   f"compile times {min(d['t_compile_s'] for d in sp):.0f}-"
+                   f"{max(d['t_compile_s'] for d in sp):.0f}s.")
+    return "\n".join(out)
+
+
+def replace_section(text: str, marker: str, new_content: str) -> str:
+    begin = f"<!-- {marker}:begin -->"
+    end = f"<!-- {marker}:end -->"
+    if begin not in text:
+        return text
+    pre, rest = text.split(begin, 1)
+    _, post = rest.split(end, 1)
+    return pre + begin + "\n" + new_content + "\n" + end + post
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = replace_section(text, "dryrun-table", dryrun_status_table())
+    rows = load_results("16x16", "baseline")
+    if rows:
+        text = replace_section(text, "roofline-table", markdown_table(rows))
+    rows_mp = load_results("2x16x16", "baseline")
+    if rows_mp:
+        ok = sum(1 for d in rows_mp if d["status"] == "ok")
+        text = replace_section(
+            text, "multipod-note",
+            f"Multi-pod (2x16x16): {ok}/{len(rows_mp)} combos compile; the "
+            f"'pod' axis shards the batch (pure DP across pods).")
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md refreshed")
+
+
+if __name__ == "__main__":
+    main()

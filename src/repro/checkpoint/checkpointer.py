@@ -1,0 +1,64 @@
+"""Checkpointing: params/opt-state/metadata -> msgpack on disk.
+
+Array pytrees are flattened to (path, array) pairs; arrays are serialized as
+raw bytes + dtype/shape.  Works for any of the zoo's param trees.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    metadata: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {"step": step, "metadata": metadata or {}}
+    for name, tree in (("params", params), ("opt_state", opt_state)):
+        if tree is None:
+            continue
+        enc = {}
+        for k, arr in _flatten(tree).items():
+            enc[k] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                      "data": arr.tobytes()}
+        payload[name] = enc
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+
+def load_checkpoint(path: str, params_template, opt_template=None):
+    """Restore into the structure of the given templates."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+
+    def restore(tree, enc):
+        flat_paths = jax.tree_util.tree_flatten_with_path(tree)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        out = []
+        for path, leaf in flat_paths[0]:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            e = enc[key]
+            arr = np.frombuffer(e["data"], dtype=e["dtype"]).reshape(e["shape"])
+            out.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    params = restore(params_template, payload["params"])
+    opt_state = None
+    if opt_template is not None and "opt_state" in payload:
+        opt_state = restore(opt_template, payload["opt_state"])
+    return params, opt_state, payload["step"], payload.get("metadata", {})

@@ -1,0 +1,41 @@
+"""Architecture configs — importing this package registers every arch."""
+from repro.configs.base import ARCH_REGISTRY, ModelConfig, get_config, list_archs, register
+
+from repro.configs import (  # noqa: F401  (registration side-effects)
+    dbrx_132b,
+    pixtral_12b,
+    seamless_m4t_medium,
+    qwen3_32b,
+    deepseek_v2_236b,
+    qwen2_7b,
+    mamba2_130m,
+    zamba2_2p7b,
+    codeqwen1p5_7b,
+    internlm2_20b,
+    paper_models,
+)
+
+ASSIGNED_ARCHS = [
+    "dbrx-132b",
+    "pixtral-12b",
+    "seamless-m4t-medium",
+    "qwen3-32b",
+    "deepseek-v2-236b",
+    "qwen2-7b",
+    "mamba2-130m",
+    "zamba2-2.7b",
+    "codeqwen1.5-7b",
+    "internlm2-20b",
+]
+
+INPUT_SHAPES = {
+    "train_4k":    dict(seq_len=4096,   global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768,  global_batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq_len=32768,  global_batch=128, kind="decode"),
+    "long_500k":   dict(seq_len=524288, global_batch=1,   kind="decode"),
+}
+
+__all__ = [
+    "ARCH_REGISTRY", "ModelConfig", "get_config", "list_archs", "register",
+    "ASSIGNED_ARCHS", "INPUT_SHAPES",
+]

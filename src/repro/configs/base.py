@@ -1,0 +1,155 @@
+"""Model/architecture configuration system.
+
+One :class:`ModelConfig` dataclass covers every family in the assigned pool
+(dense / moe / ssm / hybrid / vlm / audio enc-dec).  Architectures register
+themselves into ``ARCH_REGISTRY`` (one file per arch under ``repro/configs``)
+and are selectable everywhere via ``--arch <id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+ARCH_REGISTRY: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    vocab_size: int
+    # --- attention ---
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    qk_norm: bool = False            # qwen3
+    qkv_bias: bool = False           # qwen2
+    rope_theta: float = 1e6
+    sliding_window: int = 0          # 0 = full attention
+    # --- mlp ---
+    d_ff: int = 0
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                # per-expert ffn width (fine-grained MoE)
+    first_k_dense: int = 0           # deepseek-v2: first layer(s) dense
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    # --- MLA (deepseek-v2) ---
+    kv_lora_rank: int = 0            # 0 = standard GQA
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_n_groups: int = 1
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 64
+    # --- hybrid (zamba2) ---
+    attn_every: int = 0              # shared attn block applied every N mamba layers
+    lora_rank: int = 0               # per-invocation LoRA on the shared block
+    # --- enc-dec (seamless) ---
+    n_encoder_layers: int = 0
+    # --- vlm/audio frontend stub ---
+    n_prefix_embeds: int = 0         # patch/frame embeddings consumed per example
+    # --- numerics / training ---
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    remat: bool = True
+    scan_layers: bool = True
+    unroll_scans: bool = False   # unroll ALL lax.scan loops (dry-run aux
+                                 # compiles: exact cost_analysis, no `while`)
+    attn_block_q: int = 512      # blockwise-attention tile sizes
+    attn_block_k: int = 1024
+    remat_policy: str = "full"   # "full" | "dots" (save matmul outputs)
+    accum_dtype: str = "float32"  # big-intermediate dtype in blockwise/SSD
+    # long-context variant (decode long_500k): dense archs switch to this window
+    long_context_window: int = 0     # 0 = arch cannot serve long_500k
+
+    @property
+    def activation_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def uses_mla(self) -> bool:
+        return self.kv_lora_rank > 0
+
+    @property
+    def v_dim(self) -> int:
+        return self.v_head_dim or self.head_dim
+
+    @property
+    def qk_nope_dim(self) -> int:
+        # MLA: head_dim is the no-rope part; rope part is qk_rope_head_dim
+        return self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_n_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def reduced(self, **over) -> "ModelConfig":
+        """A tiny same-family variant for CPU smoke tests."""
+        small = dict(
+            n_layers=2,
+            d_model=128,
+            vocab_size=512,
+            n_heads=4 if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=32 if self.n_heads else 0,
+            d_ff=256 if self.d_ff else 0,
+            rope_theta=1e4,
+        )
+        if self.n_experts:
+            small.update(n_experts=4, moe_top_k=min(self.moe_top_k, 2), moe_d_ff=64,
+                         n_shared_experts=min(self.n_shared_experts, 1),
+                         first_k_dense=min(self.first_k_dense, 1))
+        if self.uses_mla:
+            small.update(kv_lora_rank=32, q_lora_rank=48, qk_rope_head_dim=16,
+                         v_head_dim=32, n_kv_heads=4)
+        if self.ssm_state:
+            small.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+        if self.attn_every:
+            small.update(n_layers=4, attn_every=2, lora_rank=8)
+        if self.n_encoder_layers:
+            small.update(n_encoder_layers=2)
+        if self.n_prefix_embeds:
+            small.update(n_prefix_embeds=8)
+        if self.sliding_window:
+            small.update(sliding_window=64)
+        small.update(dtype="float32", remat=False)
+        small.update(over)
+        return dataclasses.replace(self, **small)
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    ARCH_REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    # import side-effect registration of all arch files
+    from repro import configs as _c  # noqa: F401
+    if arch_id not in ARCH_REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCH_REGISTRY)}")
+    return ARCH_REGISTRY[arch_id]
+
+
+def list_archs():
+    from repro import configs as _c  # noqa: F401
+    return sorted(ARCH_REGISTRY)

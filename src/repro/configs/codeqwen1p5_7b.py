@@ -1,0 +1,17 @@
+"""CodeQwen1.5-7B — qwen1.5 arch, GQA [hf:Qwen/CodeQwen1.5-7B]."""
+from repro.configs.base import ModelConfig, register
+
+CODEQWEN1P5_7B = register(ModelConfig(
+    arch_id="codeqwen1.5-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,
+    d_ff=13440,
+    vocab_size=92416,
+    qkv_bias=True,
+    rope_theta=1e6,
+    long_context_window=32768,
+))

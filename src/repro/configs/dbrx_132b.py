@@ -1,0 +1,19 @@
+"""DBRX-132B — fine-grained MoE, 16 experts top-4 [hf:databricks/dbrx-base]."""
+from repro.configs.base import ModelConfig, register
+
+DBRX_132B = register(ModelConfig(
+    arch_id="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=0,                    # all layers MoE
+    vocab_size=100352,
+    n_experts=16,
+    moe_top_k=4,
+    moe_d_ff=10752,
+    rope_theta=5e5,
+    long_context_window=32768,  # SWA long-context variant (beyond-config, DESIGN.md §4)
+))

@@ -1,0 +1,26 @@
+"""DeepSeek-V2-236B — MLA (kv_lora 512), 2 shared + 160 routed experts top-6
+[arXiv:2405.04434]."""
+from repro.configs.base import ModelConfig, register
+
+DEEPSEEK_V2_236B = register(ModelConfig(
+    arch_id="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,            # MLA: all heads read the shared compressed cache
+    head_dim=128,              # qk nope dim
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    d_ff=12288,                # dense layer(s) ffn width
+    vocab_size=102400,
+    n_experts=160,
+    n_shared_experts=2,
+    moe_top_k=6,
+    moe_d_ff=1536,
+    first_k_dense=1,
+    rope_theta=1e4,
+    long_context_window=0,     # MLA + ring SWA cache not combined — skipped (DESIGN.md §4)
+))

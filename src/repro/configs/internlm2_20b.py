@@ -1,0 +1,16 @@
+"""InternLM2-20B — dense, GQA [arXiv:2403.17297]."""
+from repro.configs.base import ModelConfig, register
+
+INTERNLM2_20B = register(ModelConfig(
+    arch_id="internlm2-20b",
+    family="dense",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92544,
+    rope_theta=1e6,
+    long_context_window=32768,
+))

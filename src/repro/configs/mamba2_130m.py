@@ -1,0 +1,18 @@
+"""Mamba2-130M — attention-free SSM with SSD (state-space duality)
+[arXiv:2405.21060]."""
+from repro.configs.base import ModelConfig, register
+
+MAMBA2_130M = register(ModelConfig(
+    arch_id="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_n_groups=1,
+    ssm_chunk=64,
+    tie_embeddings=True,
+    long_context_window=-1,    # -1: natively sub-quadratic (constant-size state)
+))

@@ -1,0 +1,19 @@
+"""Pixtral-12B — pixtral-ViT frontend (stubbed) + Mistral-Nemo decoder
+[hf:mistralai/Pixtral-12B-2409]. We implement the language decoder; the vision
+encoder is a stub: input_specs() supplies precomputed patch embeddings."""
+from repro.configs.base import ModelConfig, register
+
+PIXTRAL_12B = register(ModelConfig(
+    arch_id="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    rope_theta=1e6,
+    n_prefix_embeds=1024,      # patch embeddings per image (stub frontend)
+    long_context_window=32768,
+))

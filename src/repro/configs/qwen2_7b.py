@@ -1,0 +1,17 @@
+"""Qwen2-7B — dense, GQA, QKV bias [arXiv:2407.10671]."""
+from repro.configs.base import ModelConfig, register
+
+QWEN2_7B = register(ModelConfig(
+    arch_id="qwen2-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+    long_context_window=32768,
+))

@@ -1,0 +1,17 @@
+"""Qwen3-32B — dense, GQA, qk-norm [hf:Qwen/Qwen3-8B family]."""
+from repro.configs.base import ModelConfig, register
+
+QWEN3_32B = register(ModelConfig(
+    arch_id="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+    long_context_window=32768,
+))

@@ -1,0 +1,20 @@
+"""SeamlessM4T-medium — encoder-decoder, multimodal [arXiv:2308.11596].
+The speech frontend (mel + conv feature extractor) is a stub: input_specs()
+supplies precomputed frame embeddings fed to the text/unit decoder stack."""
+from repro.configs.base import ModelConfig, register
+
+SEAMLESS_M4T_MEDIUM = register(ModelConfig(
+    arch_id="seamless-m4t-medium",
+    family="encdec",
+    n_layers=12,               # decoder layers
+    n_encoder_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,             # MHA
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    rope_theta=1e4,
+    n_prefix_embeds=1024,      # audio frame embeddings (stub frontend)
+    long_context_window=0,     # enc-dec translation decoder: long_500k skipped (DESIGN.md)
+))

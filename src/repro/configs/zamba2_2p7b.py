@@ -1,0 +1,24 @@
+"""Zamba2-2.7B — Mamba2 backbone + shared attention blocks with per-invocation
+LoRA [arXiv:2411.15242]."""
+from repro.configs.base import ModelConfig, register
+
+ZAMBA2_2P7B = register(ModelConfig(
+    arch_id="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,               # mamba2 layers
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,                # shared block ffn
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_n_groups=1,
+    ssm_chunk=64,
+    attn_every=6,              # shared attn+mlp block every 6 mamba layers
+    lora_rank=64,
+    sliding_window=0,
+    long_context_window=4096,  # shared attn uses SWA in the long-context variant
+))

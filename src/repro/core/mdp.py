@@ -1,0 +1,114 @@
+"""Observation-token MDP (paper §2.2).
+
+The state  s_t = {X_<=t, O_<=t}  interleaves model-generated text tokens X and
+tool-produced observation tokens O.  We represent a trajectory as a list of
+typed segments; observation segments are *appended to the context* but
+*excluded from the policy loss* via the per-token loss mask — "environmental
+feedback ... does not participate in the model loss calculation" (paper §2.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, List, Optional
+
+import numpy as np
+
+
+class Role(enum.Enum):
+    PROMPT = "prompt"           # task prompt / system prompt (no loss)
+    MODEL = "model"             # X tokens: policy actions (loss-masked IN)
+    OBSERVATION = "observation"  # O tokens: tool feedback (loss-masked OUT)
+
+
+@dataclasses.dataclass
+class Segment:
+    role: Role
+    tokens: List[int]
+
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+
+@dataclasses.dataclass
+class Trajectory:
+    """One multi-turn rollout: prompt -> (model -> observation)* -> model."""
+    segments: List[Segment] = dataclasses.field(default_factory=list)
+    meta: dict = dataclasses.field(default_factory=dict)
+    reward: float = 0.0
+    reward_breakdown: dict = dataclasses.field(default_factory=dict)
+    group_id: int = 0           # GRPO group (same prompt => same group)
+    n_tool_calls: int = 0
+    finished: bool = False      # emitted a final answer (vs hit budget)
+
+    # ------------------------------------------------------------- building
+    def append(self, role: Role, tokens: List[int]) -> None:
+        if self.segments and self.segments[-1].role == role:
+            self.segments[-1].tokens.extend(tokens)
+        else:
+            self.segments.append(Segment(role, list(tokens)))
+
+    # ------------------------------------------------------------- views
+    def tokens(self) -> List[int]:
+        out: List[int] = []
+        for seg in self.segments:
+            out.extend(seg.tokens)
+        return out
+
+    def loss_mask(self) -> List[int]:
+        """1 on MODEL tokens (policy actions), 0 on prompt/observations."""
+        out: List[int] = []
+        for seg in self.segments:
+            out.extend([1 if seg.role == Role.MODEL else 0] * len(seg.tokens))
+        return out
+
+    def observation_tokens(self) -> List[int]:
+        out: List[int] = []
+        for seg in self.segments:
+            if seg.role == Role.OBSERVATION:
+                out.extend(seg.tokens)
+        return out
+
+    def model_tokens(self) -> List[int]:
+        out: List[int] = []
+        for seg in self.segments:
+            if seg.role == Role.MODEL:
+                out.extend(seg.tokens)
+        return out
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.segments)
+
+
+def to_training_batch(trajs: List[Trajectory], max_len: int, pad_id: int,
+                      old_logprobs: Optional[List[np.ndarray]] = None) -> dict:
+    """Pack trajectories into right-padded arrays for the RL update.
+
+    Shapes: tokens/loss_mask/old_logprobs (B, L); advantages filled later by
+    the GRPO/PPO advantage pass.  The loss applies to predicting token t+1
+    from prefix <=t, so the mask is aligned to *target* positions downstream
+    (see core/grpo.py: targets are tokens[:, 1:]).
+    """
+    B = len(trajs)
+    L = min(max_len, max(len(t) for t in trajs))
+    tokens = np.full((B, L), pad_id, np.int32)
+    mask = np.zeros((B, L), np.float32)
+    olp = np.zeros((B, L), np.float32)
+    lengths = np.zeros((B,), np.int32)
+    for i, tr in enumerate(trajs):
+        ids = tr.tokens()[:L]
+        lm = tr.loss_mask()[:L]
+        tokens[i, :len(ids)] = ids
+        mask[i, :len(lm)] = lm
+        lengths[i] = len(ids)
+        if old_logprobs is not None and old_logprobs[i] is not None:
+            lp = old_logprobs[i][:L]
+            olp[i, :len(lp)] = lp
+    return {
+        "tokens": tokens,
+        "loss_mask": mask,
+        "old_logprobs": olp,
+        "lengths": lengths,
+        "rewards": np.array([t.reward for t in trajs], np.float32),
+        "group_ids": np.array([t.group_id for t in trajs], np.int32),
+    }

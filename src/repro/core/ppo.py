@@ -1,0 +1,137 @@
+"""PPO with a learned value head — the veRL-native baseline algorithm
+(paper §2.3.1 foundation layer: "verl-based native reinforcement learning
+training mechanisms (e.g., the PPO algorithm)").
+
+Critic: a linear value head on the policy's final hidden state (token-level
+values).  GAE over MODEL-token positions; observation tokens get zero
+advantage by masking, exactly like GRPO.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grpo import token_logprobs
+from repro.models.params import ParamSpec, init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    clip_eps: float = 0.2
+    value_clip: float = 0.2
+    value_coef: float = 0.5
+    entropy_coef: float = 0.0
+    gamma: float = 1.0
+    lam: float = 0.95
+    aux_coef: float = 0.001
+
+
+def value_head_specs(d_model: int) -> dict:
+    return {"w": ParamSpec((d_model, 1), ("embed_p", None), init="scaled"),
+            "b": ParamSpec((1,), (None,), init="zeros")}
+
+
+def value_head_apply(vparams, hidden) -> jnp.ndarray:
+    """hidden (B,S,d) -> values (B,S) f32."""
+    v = hidden.astype(jnp.float32) @ vparams["w"].astype(jnp.float32)
+    return v[..., 0] + vparams["b"].astype(jnp.float32)[0]
+
+
+def gae_advantages(values: jnp.ndarray, rewards: jnp.ndarray,
+                   mask: jnp.ndarray, gamma: float, lam: float):
+    """Token-level GAE with a single terminal reward per trajectory.
+
+    values (B,S): V(s_t) at each position; rewards (B,): terminal reward,
+    credited at each row's last masked position; mask (B,S): 1 on MODEL
+    (action) positions.  Non-action positions are skipped by carrying the
+    accumulator through them (gamma=1 semantics across observation spans).
+    Returns (advantages (B,S), returns (B,S)).
+    """
+    B, S = values.shape
+    # terminal position per row = last masked index
+    idx = jnp.arange(S)[None, :]
+    last = jnp.max(jnp.where(mask > 0, idx, -1), axis=1)          # (B,)
+    r_t = jnp.where(idx == last[:, None], rewards[:, None], 0.0)  # (B,S)
+
+    def step(carry, xs):
+        adv_next, v_next = carry
+        v_t, r, m = xs
+        delta = r + gamma * v_next - v_t
+        adv = delta + gamma * lam * adv_next
+        # skip non-action positions: carry (adv_next, v_next) through
+        adv_out = jnp.where(m > 0, adv, adv_next)
+        v_out = jnp.where(m > 0, v_t, v_next)
+        return (adv_out, v_out), adv_out
+
+    xs = (jnp.moveaxis(values, 1, 0), jnp.moveaxis(r_t, 1, 0),
+          jnp.moveaxis(mask, 1, 0))
+    xs = jax.tree_util.tree_map(lambda a: a[::-1], xs)
+    (_, _), advs = jax.lax.scan(step, (jnp.zeros(B), jnp.zeros(B)), xs)
+    advs = jnp.moveaxis(advs[::-1], 0, 1)                         # (B,S)
+    returns = advs + values
+    return advs * mask, returns
+
+
+def ppo_loss(logits, hidden, vparams, batch, cfg: PPOConfig, aux=0.0):
+    """batch: tokens, loss_mask, old_logprobs, old_values (B,S), rewards (B,)."""
+    lp = token_logprobs(logits, batch["tokens"])                  # (B,S-1)
+    mask = batch["loss_mask"][:, 1:].astype(jnp.float32)
+    old = batch["old_logprobs"][:, 1:].astype(jnp.float32)
+    values = value_head_apply(vparams, hidden)[:, :-1]            # V at prefix t
+    old_values = batch["old_values"][:, :-1].astype(jnp.float32)
+
+    adv, returns = gae_advantages(jax.lax.stop_gradient(values),
+                                  batch["rewards"].astype(jnp.float32),
+                                  mask, cfg.gamma, cfg.lam)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    adv_mean = (adv * mask).sum() / denom
+    adv_std = jnp.sqrt((jnp.square(adv - adv_mean) * mask).sum() / denom)
+    adv_n = (adv - adv_mean) / (adv_std + 1e-6)
+
+    ratio = jnp.exp(lp - old)
+    pg = -jnp.minimum(ratio * adv_n,
+                      jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv_n)
+    pg_loss = (pg * mask).sum() / denom
+
+    v_clipped = old_values + jnp.clip(values - old_values,
+                                      -cfg.value_clip, cfg.value_clip)
+    v_loss = jnp.maximum(jnp.square(values - returns),
+                         jnp.square(v_clipped - returns))
+    v_loss = 0.5 * (v_loss * mask).sum() / denom
+
+    ent = -(lp * mask).sum() / denom
+    loss = pg_loss + cfg.value_coef * v_loss - cfg.entropy_coef * ent \
+        + cfg.aux_coef * aux
+    return loss, {"loss": loss, "pg_loss": pg_loss, "v_loss": v_loss,
+                  "entropy_proxy": ent,
+                  "clip_frac": ((jnp.abs(ratio - 1) > cfg.clip_eps) * mask
+                                ).sum() / denom}
+
+
+def make_ppo_train_step(model, opt_cfg, ppo_cfg: PPOConfig):
+    """params = {"lm": ..., "value": ...}; decoder-LM families."""
+    from repro.models import transformer as T
+    from repro.optim.adamw import adamw_update
+
+    def loss_fn(params, batch):
+        logits, aux, _, hidden = T.lm_apply(
+            params["lm"], model.cfg, batch["tokens"], return_hidden=True)
+        return ppo_loss(logits, hidden, params["value"], batch, ppo_cfg, aux=aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_ppo_params(model, key):
+    k1, k2 = jax.random.split(key)
+    return {"lm": model.init(k1),
+            "value": init_params(k2, value_head_specs(model.cfg.d_model))}

@@ -1,0 +1,126 @@
+"""Diverse reward computation (paper §2.4.1): rule / model-judge / tool-verify.
+
+The three paradigms can be used independently or combined
+(:class:`RewardComposer`), matching the paper's "used independently or in
+combination ... through the unified interface of the Env class".
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.mdp import Trajectory
+
+
+class RewardFn:
+    name = "reward"
+
+    def __call__(self, trajs: List[Trajectory], ground_truths: Sequence) -> np.ndarray:
+        raise NotImplementedError
+
+
+class RuleReward(RewardFn):
+    """Eq. 1 — weighted rule components, delegated to Env.compute_score."""
+    name = "rule"
+
+    def __init__(self, env):
+        self.env = env
+
+    def __call__(self, trajs, ground_truths):
+        out = np.zeros((len(trajs),), np.float32)
+        for i, (tr, gt) in enumerate(zip(trajs, ground_truths)):
+            comp = self.env.compute_score(tr, gt)
+            tr.reward_breakdown.update({f"rule/{k}": v for k, v in comp.items()
+                                        if isinstance(v, (int, float))})
+            out[i] = comp["score"]
+        return out
+
+
+class ModelJudgeReward(RewardFn):
+    """Eq. 2 — R_judge(tau) = f_judge(tau, c): a judge LM scores the trajectory.
+
+    The judge runs on the same serving engine infrastructure as rollout
+    (the veRL reward_rollout_wg analogue; the paper deploys QwQ-32B, here any
+    configured Model).  The criterion c is the prompt template; the score is
+    parsed from the judge's output ("Score: <0-10>").
+    """
+    name = "judge"
+    SCORE_RE = re.compile(r"(?:score|rating)\s*[:=]?\s*([0-9]+(?:\.[0-9]+)?)",
+                          re.I)
+
+    def __init__(self, judge_engine, tokenizer, criterion: Optional[str] = None,
+                 max_judge_tokens: int = 32, seed: int = 0):
+        self.engine = judge_engine
+        self.tok = tokenizer
+        self.criterion = criterion or (
+            "Rate how well the assistant answered (0-10). Respond 'Score: N'.")
+        self.max_judge_tokens = max_judge_tokens
+        self.seed = seed
+
+    def get_prompt_for_reward(self, traj: Trajectory, ground_truth) -> str:
+        convo = self.tok.decode(traj.tokens())
+        return (f"{self.criterion}\nReference: {ground_truth}\n"
+                f"Conversation:\n{convo}\nScore:")
+
+    def extract_score(self, text: str) -> float:
+        m = self.SCORE_RE.search("score:" + text)
+        if not m:
+            return 0.0
+        return float(np.clip(float(m.group(1)) / 10.0, 0.0, 1.0))
+
+    def __call__(self, trajs, ground_truths):
+        prompts = [self.tok.encode(self.get_prompt_for_reward(t, g))
+                   for t, g in zip(trajs, ground_truths)]
+        session = self.engine.start(prompts)
+        toks, _ = self.engine.generate(session, self.max_judge_tokens,
+                                       jax.random.PRNGKey(self.seed),
+                                       temperature=0.0)
+        out = np.zeros((len(trajs),), np.float32)
+        for i, t in enumerate(toks):
+            score = self.extract_score(self.tok.decode(t))
+            trajs[i].reward_breakdown["judge/score"] = score
+            out[i] = score
+        return out
+
+
+class ToolVerifyReward(RewardFn):
+    """Eq. 3 — R_verify(a) = g(T_verify(a), y_expected): execute the model's
+    answer through the env's verifier tool and compare."""
+    name = "verify"
+
+    def __init__(self, env, tokenizer):
+        self.env = env
+        self.tok = tokenizer
+
+    def __call__(self, trajs, ground_truths):
+        out = np.zeros((len(trajs),), np.float32)
+        for i, (tr, gt) in enumerate(zip(trajs, ground_truths)):
+            text = self.tok.decode(tr.model_tokens())
+            _, answer = self.env.manager.parse_response(text)
+            res = self.env.verify_tool(answer, gt)
+            ok = bool(res is not None and res.ok and res.content == "True")
+            # store like the paper: non_tensor_batch[...]['verified_results']
+            tr.meta.setdefault("reward_model", {}).setdefault(
+                "ground_truth", {})["verified_results"] = (
+                    res.content if res else None)
+            tr.reward_breakdown["verify/supported"] = float(ok)
+            out[i] = float(ok)
+        return out
+
+
+@dataclasses.dataclass
+class RewardComposer:
+    """Weighted combination of the three paradigms."""
+    fns: List[tuple]               # (RewardFn, weight)
+
+    def __call__(self, trajs: List[Trajectory], ground_truths) -> np.ndarray:
+        total = np.zeros((len(trajs),), np.float32)
+        for fn, w in self.fns:
+            total += w * fn(trajs, ground_truths)
+        for tr, r in zip(trajs, total):
+            tr.reward = float(r)
+        return total

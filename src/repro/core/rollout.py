@@ -1,0 +1,116 @@
+"""Generate -> Parse -> Invoke -> Update rollout loop (paper §2.3.2, Fig. 4).
+
+One RolloutWorker drives a batch of trajectories through multi-turn tool use:
+
+  Generate  batched sampling on the serving engine until </tool_call>,
+            </answer> or <eos>;
+  Parse     ToolManager extracts tool calls / final answers; no call intent
+            => the interaction terminates (paper);
+  Invoke    AsyncToolExecutor fans every pending call of the whole batch out
+            concurrently (asyncio) — the paper's throughput contribution;
+  Update    tool results are formatted, tokenized and appended as OBSERVATION
+            tokens (loss-masked out), and the engine's cache is extended.
+
+GRPO grouping: each task is replicated ``group_size`` times with a shared
+group_id so the advantage pass can normalize within groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.async_engine import AsyncToolExecutor, SerialToolExecutor
+from repro.core.mdp import Role, Trajectory
+from repro.serving.engine import GenerationEngine
+
+
+@dataclasses.dataclass
+class RolloutConfig:
+    max_turns: int = 4
+    max_new_tokens: int = 64
+    temperature: float = 1.0
+    group_size: int = 4            # GRPO group size
+    seed: int = 0
+
+
+class RolloutWorker:
+    def __init__(self, engine: GenerationEngine, env, tokenizer,
+                 config: RolloutConfig, executor=None):
+        self.engine = engine
+        self.env = env
+        self.tok = tokenizer
+        self.config = config
+        self.executor = executor or AsyncToolExecutor(env.registry)
+        stop = {tokenizer.eos_id, tokenizer.answer_end_id,
+                tokenizer.tool_call_end_id}
+        self.engine.stop_ids = tuple(stop)
+
+    # ------------------------------------------------------------------ API
+    def rollout(self, tasks: Sequence[Tuple[str, object]], key: jax.Array,
+                group_size: Optional[int] = None) -> List[Trajectory]:
+        """tasks: (question, ground_truth) pairs.  Returns group_size
+        trajectories per task (same group_id)."""
+        gs = self.config.group_size if group_size is None else group_size
+        trajs: List[Trajectory] = []
+        for gid, (q, gt) in enumerate(tasks):
+            prompt_ids = self.tok.encode(self.env.manager.get_prompt(q),
+                                         add_bos=True)
+            for _ in range(gs):
+                tr = Trajectory(group_id=gid,
+                                meta={"question": q, "ground_truth": gt,
+                                      "logprobs": []})
+                tr.append(Role.PROMPT, prompt_ids)
+                tr.meta["logprobs"].extend([0.0] * len(prompt_ids))
+                trajs.append(tr)
+
+        session = self.engine.start([t.tokens() for t in trajs])
+
+        for turn in range(self.config.max_turns):
+            # ---- Generate
+            key, sub = jax.random.split(key)
+            new_toks, new_lps = self.engine.generate(
+                session, self.config.max_new_tokens, sub,
+                temperature=self.config.temperature)
+
+            # ---- Parse
+            batch_calls = [[] for _ in trajs]
+            any_call = False
+            for i, tr in enumerate(trajs):
+                if not new_toks[i]:
+                    continue
+                tr.append(Role.MODEL, new_toks[i])
+                tr.meta["logprobs"].extend([float(x) for x in new_lps[i]])
+                text = self.tok.decode(new_toks[i])
+                calls, answer = self.env.manager.parse_response(text)
+                over_budget = tr.n_tool_calls + len(calls) > self.env.max_tool_calls
+                if answer is not None or not calls or over_budget:
+                    tr.finished = answer is not None
+                    session.stopped[i] = True
+                else:
+                    batch_calls[i] = calls
+                    tr.n_tool_calls += len(calls)
+                    any_call = True
+
+            if not any_call or turn == self.config.max_turns - 1:
+                break
+
+            # ---- Invoke (async, batch-wide)
+            results = self.executor.execute_batch(batch_calls)
+
+            # ---- Update
+            obs_tokens: List[List[int]] = []
+            for i, tr in enumerate(trajs):
+                if batch_calls[i]:
+                    obs_text = self.env.manager.format_observation(results[i])
+                    ids = self.tok.encode(obs_text)
+                    tr.append(Role.OBSERVATION, ids)
+                    tr.meta["logprobs"].extend([0.0] * len(ids))
+                    obs_tokens.append(ids)
+                else:
+                    obs_tokens.append([])
+            self.engine.extend(session, obs_tokens)
+
+        return trajs

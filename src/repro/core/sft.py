@@ -1,0 +1,72 @@
+"""Behaviour-cloning / SFT on tool-use trajectories.
+
+Used to give the randomly-initialized CPU demo model the "instruction-tuned
+base" role Qwen3-4B plays in the paper (which lets RLFactory skip SFT); the
+RL stage then improves tool use on top.  Loss = cross-entropy on MODEL tokens
+only (same loss mask as RL — observations are never trained on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mdp import Role, Trajectory
+from repro.core.grpo import token_logprobs
+
+
+def make_expert_trajectories(env, tok, n: int, seed: int = 0,
+                             split: str = "train") -> List[Trajectory]:
+    """Scripted expert: search for the question's relation+entity, then copy
+    the retrieved value into <answer> — the behaviour RL should refine."""
+    import re
+    tasks = env.sample_tasks(n, split=split, seed=seed)
+    out = []
+    for gid, (q, gt) in enumerate(tasks):
+        m = re.match(r"what is the (\w+) of (\w+)\?", q)
+        rel, ent = m.group(1), m.group(2)
+        tr = Trajectory(group_id=gid, meta={"question": q, "ground_truth": gt})
+        tr.append(Role.PROMPT, tok.encode(env.manager.get_prompt(q),
+                                          add_bos=True))
+        tr.append(Role.MODEL,
+                  tok.encode(f"<tool_call>search: {rel} {ent}</tool_call>"))
+        hits = env.corpus.search(f"{rel} {ent}")
+        obs = env.manager.format_observation(
+            [type("R", (), {"content": " | ".join(hits)})()])
+        tr.append(Role.OBSERVATION, tok.encode(obs))
+        tr.append(Role.MODEL, tok.encode(f"<answer>{gt}</answer>") + [tok.eos_id])
+        tr.n_tool_calls = 1
+        tr.finished = True
+        out.append(tr)
+    return out
+
+
+def sft_loss(logits, batch):
+    """Masked next-token cross-entropy."""
+    lp = token_logprobs(logits, batch["tokens"])       # (B,S-1)
+    mask = batch["loss_mask"][:, 1:].astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = -(lp * mask).sum() / denom
+    return loss, {"loss": loss, "ppl_proxy": jnp.exp(loss)}
+
+
+def make_sft_train_step(model, opt_cfg):
+    from repro.optim.adamw import adamw_update
+
+    def loss_fn(params, batch):
+        logits, aux, _ = model.apply(params, {"tokens": batch["tokens"]})
+        loss, metrics = sft_loss(logits, batch)
+        return loss + 0.001 * aux, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,182 @@
+"""RLFactory trainer — orchestrates rollout -> reward -> GRPO update.
+
+One iteration (paper Fig. 4):
+  1. sample tasks; rollout ``group_size`` trajectories per task through the
+     Generate-Parse-Invoke-Update loop (async tool execution);
+  2. score trajectories with the configured reward composer (rule / judge /
+     verify, §2.4.1);
+  3. group-normalize advantages (GRPO);
+  4. recompute reference logprobs (frozen policy) if KL is enabled;
+  5. clipped-surrogate update on loss-masked tokens (observation tokens are
+     excluded — §2.2);
+  6. refresh the rollout engine with the new params.
+
+Sequence lengths are bucketed so the jitted train step recompiles O(log) times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grpo import (GRPOConfig, grpo_advantages, make_grpo_train_step,
+                             token_logprobs)
+from repro.core.mdp import to_training_batch
+from repro.core.rollout import RolloutConfig, RolloutWorker
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.serving.engine import GenerationEngine
+
+
+def _bucket_len(n: int, step: int = 64) -> int:
+    return max(step, ((n + step - 1) // step) * step)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    n_tasks_per_iter: int = 8
+    group_size: int = 4
+    max_seq_len: int = 512
+    eval_every: int = 0
+    checkpoint_every: int = 0
+    checkpoint_dir: str = "results/checkpoints"
+    log_path: str = ""
+
+
+class RLTrainer:
+    def __init__(self, model, params, env, tokenizer, reward_composer,
+                 trainer_cfg: TrainerConfig, rollout_cfg: RolloutConfig,
+                 grpo_cfg: GRPOConfig, opt_cfg: AdamWConfig,
+                 ref_params=None, executor=None):
+        self.model = model
+        self.params = params
+        self.env = env
+        self.tok = tokenizer
+        self.rewards = reward_composer
+        self.cfg = trainer_cfg
+        self.grpo_cfg = grpo_cfg
+        self.opt_cfg = opt_cfg
+        self.opt_state = adamw_init(params)
+        self.ref_params = ref_params          # frozen; None => no KL
+        self.engine = GenerationEngine(
+            model, params, pad_id=tokenizer.pad_id,
+            stop_ids=(tokenizer.eos_id,), max_len=trainer_cfg.max_seq_len,
+            temperature=rollout_cfg.temperature)
+        self.worker = RolloutWorker(self.engine, env, tokenizer, rollout_cfg,
+                                    executor=executor)
+        self._train_step = jax.jit(make_grpo_train_step(
+            model, opt_cfg, grpo_cfg))
+        self._ref_logprob_fn = jax.jit(self._ref_logprobs_impl)
+        self.step = 0
+        self.history: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def _ref_logprobs_impl(self, params, tokens):
+        logits, _, _ = self.model.apply(params, {"tokens": tokens})
+        lp = token_logprobs(logits, tokens)
+        return jnp.concatenate([jnp.zeros((tokens.shape[0], 1)), lp], axis=1)
+
+    def train_iteration(self, key: jax.Array) -> dict:
+        t0 = time.monotonic()
+        key, k_task, k_roll = jax.random.split(key, 3)
+        seed = int(jax.random.randint(k_task, (), 0, 2**31 - 1))
+        tasks = self.env.sample_tasks(self.cfg.n_tasks_per_iter,
+                                      split="train", seed=seed)
+        trajs = self.worker.rollout(tasks, k_roll,
+                                    group_size=self.cfg.group_size)
+        t_roll = time.monotonic() - t0
+
+        gts = [t.meta["ground_truth"] for t in trajs]
+        rewards = self.rewards(trajs, gts)
+        adv = grpo_advantages(rewards, [t.group_id for t in trajs])
+
+        old_lps = [np.array(t.meta["logprobs"], np.float32) for t in trajs]
+        batch_np = to_training_batch(trajs, self.cfg.max_seq_len,
+                                     self.tok.pad_id, old_logprobs=old_lps)
+        L = _bucket_len(batch_np["tokens"].shape[1])
+        B = batch_np["tokens"].shape[0]
+        batch = {
+            "tokens": _pad_to(batch_np["tokens"], L, self.tok.pad_id),
+            "loss_mask": _pad_to(batch_np["loss_mask"], L, 0.0),
+            "old_logprobs": _pad_to(batch_np["old_logprobs"], L, 0.0),
+            "advantages": jnp.asarray(adv),
+        }
+        if self.ref_params is not None and self.grpo_cfg.kl_coef > 0:
+            batch["ref_logprobs"] = self._ref_logprob_fn(self.ref_params,
+                                                         batch["tokens"])
+        else:
+            batch["ref_logprobs"] = jnp.zeros((B, L), jnp.float32)
+
+        t1 = time.monotonic()
+        self.params, self.opt_state, metrics = self._train_step(
+            self.params, self.opt_state, batch)
+        self.engine.params = self.params   # refresh rollout weights
+        t_train = time.monotonic() - t1
+
+        self.step += 1
+        n_model_tokens = int(batch_np["loss_mask"].sum())
+        out = {
+            "step": self.step,
+            "reward_mean": float(rewards.mean()),
+            "reward_std": float(rewards.std()),
+            "exact_match": float(np.mean([
+                t.reward_breakdown.get("rule/exact_match", 0.0) for t in trajs])),
+            "finished_frac": float(np.mean([t.finished for t in trajs])),
+            "tool_calls_mean": float(np.mean([t.n_tool_calls for t in trajs])),
+            "traj_len_mean": float(np.mean([len(t) for t in trajs])),
+            "rollout_s": t_roll,
+            "train_s": t_train,
+            "model_tokens": n_model_tokens,
+            "throughput_tok_s": n_model_tokens / max(t_roll + t_train, 1e-9),
+            **{k: float(v) for k, v in metrics.items()},
+        }
+        self.history.append(out)
+        if self.cfg.log_path:
+            os.makedirs(os.path.dirname(self.cfg.log_path) or ".",
+                        exist_ok=True)
+            with open(self.cfg.log_path, "a") as f:
+                f.write(json.dumps(out) + "\n")
+        if (self.cfg.checkpoint_every
+                and self.step % self.cfg.checkpoint_every == 0):
+            from repro.checkpoint.checkpointer import save_checkpoint
+            save_checkpoint(
+                os.path.join(self.cfg.checkpoint_dir, f"step_{self.step}.ckpt"),
+                self.params, self.opt_state, step=self.step)
+        return out
+
+    # ------------------------------------------------------------------
+    def evaluate(self, n_tasks: int = 32, seed: int = 1234) -> dict:
+        """Greedy rollouts on the held-out split; exact-match score."""
+        tasks = self.env.sample_tasks(n_tasks, split="test", seed=seed)
+        old_temp = self.worker.config.temperature
+        self.worker.config.temperature = 0.0
+        try:
+            trajs = self.worker.rollout(tasks, jax.random.PRNGKey(seed),
+                                        group_size=1)
+        finally:
+            self.worker.config.temperature = old_temp
+        gts = [t.meta["ground_truth"] for t in trajs]
+        scores = [self.env.compute_score(t, g) for t, g in zip(trajs, gts)]
+        return {
+            "test_score": float(np.mean([s["score"] for s in scores])),
+            "test_exact_match": float(np.mean([s["exact_match"]
+                                               for s in scores])),
+            "test_answer_format": float(np.mean([s["answer_format"]
+                                                 for s in scores])),
+            "test_tool_format": float(np.mean([s["tool_format"]
+                                               for s in scores])),
+        }
+
+
+def _pad_to(arr: np.ndarray, L: int, fill) -> jnp.ndarray:
+    B, cur = arr.shape
+    if cur >= L:
+        return jnp.asarray(arr[:, :L])
+    out = np.full((B, L), fill, arr.dtype)
+    out[:, :cur] = arr
+    return jnp.asarray(out)

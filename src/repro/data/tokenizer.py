@@ -1,0 +1,94 @@
+"""Byte-level tokenizer with special tokens.
+
+Offline container => no pretrained vocab.  We use UTF-8 bytes (ids 0..255)
+plus special tokens for the tool-call protocol.  Deterministic, reversible,
+and adequate for the synthetic Search-R1-style corpora used in the e2e runs.
+"""
+from __future__ import annotations
+
+import re
+from typing import Iterable, List
+
+SPECIAL_TOKENS = [
+    "<pad>",
+    "<bos>",
+    "<eos>",
+    "<tool_call>",
+    "</tool_call>",
+    "<tool_response>",
+    "</tool_response>",
+    "<answer>",
+    "</answer>",
+    "<think>",
+    "</think>",
+    "<im_start>",
+    "<im_end>",
+]
+
+
+class ByteTokenizer:
+    def __init__(self, vocab_size: int = 4096):
+        assert vocab_size >= 256 + len(SPECIAL_TOKENS)
+        self.vocab_size = vocab_size
+        self.special = {tok: 256 + i for i, tok in enumerate(SPECIAL_TOKENS)}
+        self.special_inv = {v: k for k, v in self.special.items()}
+        self._pattern = re.compile(
+            "(" + "|".join(re.escape(t) for t in SPECIAL_TOKENS) + ")")
+
+    # -- ids for common specials
+    @property
+    def pad_id(self) -> int: return self.special["<pad>"]
+    @property
+    def bos_id(self) -> int: return self.special["<bos>"]
+    @property
+    def eos_id(self) -> int: return self.special["<eos>"]
+    @property
+    def answer_end_id(self) -> int: return self.special["</answer>"]
+    @property
+    def tool_call_end_id(self) -> int: return self.special["</tool_call>"]
+
+    def encode(self, text: str, add_bos: bool = False,
+               add_eos: bool = False) -> List[int]:
+        ids: List[int] = [self.bos_id] if add_bos else []
+        for part in self._pattern.split(text):
+            if not part:
+                continue
+            if part in self.special:
+                ids.append(self.special[part])
+            else:
+                ids.extend(part.encode("utf-8"))
+        if add_eos:
+            ids.append(self.eos_id)
+        return ids
+
+    def decode(self, ids: Iterable[int]) -> str:
+        out: List[str] = []
+        buf: List[int] = []
+
+        def flush():
+            if buf:
+                out.append(bytes(buf).decode("utf-8", errors="replace"))
+                buf.clear()
+
+        for i in ids:
+            i = int(i)
+            if i < 256:
+                buf.append(i)
+            elif i in self.special_inv:
+                flush()
+                tok = self.special_inv[i]
+                if tok not in ("<pad>", "<bos>"):
+                    out.append(tok)
+            # ids >= 256+len(specials): unused tail of the vocab -> skip
+        flush()
+        return "".join(out)
+
+
+_DEFAULT = None
+
+
+def default_tokenizer(vocab_size: int = 4096) -> ByteTokenizer:
+    global _DEFAULT
+    if _DEFAULT is None or _DEFAULT.vocab_size != vocab_size:
+        _DEFAULT = ByteTokenizer(vocab_size)
+    return _DEFAULT

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (
+    DEFAULT_RULES, ShardingRules, active_rules, shard_hint, use_sharding_rules,
+)
+
+__all__ = ["DEFAULT_RULES", "ShardingRules", "active_rules", "shard_hint",
+           "use_sharding_rules"]

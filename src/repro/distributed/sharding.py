@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules.
+
+Parameters and activations carry *logical* dim names (see models/params.py).
+A :class:`ShardingRules` maps logical names to mesh axes, with a divisibility
+check that falls back to replication — this is what lets a kv_heads=8 arch and
+a kv_heads=128 arch both lower on the same ``model=16`` mesh axis.
+
+Activation sharding inside model code goes through :func:`shard_hint`, which is
+a no-op unless a rule-set has been activated (by the launcher / dry-run) via
+:func:`use_sharding_rules`.  Model code therefore stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamSpec, tree_map_specs
+
+# logical name -> mesh axis (or tuple of axes). Names absent => replicated.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),       # data parallel over pods x data axis
+    "seq": None,
+    "embed": None,                  # residual dim of activations: replicated
+    "embed_p": "data",              # *parameter* embed dim: FSDP-sharded
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "kv_lora": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "layers": None,
+}
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def _axis_for(self, name, dim_size: int, strict: bool = True):
+        ax = self.rules.get(name)
+        if ax is None:
+            return None
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        # keep only axes present in this mesh
+        axes = tuple(a for a in axes if a in self.mesh.axis_names)
+        if not axes:
+            return None
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        if dim_size % n != 0:
+            # GSPMD supports uneven *constraint* shardings (implicit padding);
+            # accept them for activations (strict=False) whenever the dim is
+            # at least the shard count — bounded padding waste beats full
+            # replication (28 heads on model=16: pad to 32 = 14% waste vs
+            # 16x replicated compute).  pjit INPUT shardings must divide.
+            if not strict and dim_size >= n:
+                return axes if len(axes) > 1 else axes[0]
+            # try the prefix of axes that fits
+            for cut in range(len(axes) - 1, 0, -1):
+                sub = axes[:cut]
+                n = 1
+                for a in sub:
+                    n *= self.mesh.shape[a]
+                if dim_size % n == 0 or (not strict and dim_size >= n):
+                    return sub if len(sub) > 1 else sub[0]
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def pspec(self, axes: tuple, shape: tuple, strict: bool = True) -> P:
+        parts, used = [], set()
+        for name, dim in zip(axes, shape):
+            ax = self._axis_for(name, dim, strict=strict) if name else None
+            # a mesh axis can appear at most once in a PartitionSpec
+            if ax is not None:
+                flat = (ax,) if isinstance(ax, str) else tuple(ax)
+                if any(a in used for a in flat):
+                    ax = None
+                else:
+                    used.update(flat)
+            parts.append(ax)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding(self, axes: tuple, shape: tuple,
+                 strict: bool = True) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(axes, shape, strict=strict))
+
+    def specs_to_pspecs(self, spec_tree):
+        return tree_map_specs(lambda s: self.pspec(s.axes, s.shape), spec_tree)
+
+    def specs_to_shardings(self, spec_tree):
+        return tree_map_specs(lambda s: self.sharding(s.axes, s.shape), spec_tree)
+
+
+_tls = threading.local()
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_sharding_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_tls, "rules", None)
+    _tls.rules = rules
+    try:
+        yield
+    finally:
+        _tls.rules = prev
+
+
+def shard_hint(x: jax.Array, names: tuple) -> jax.Array:
+    """Annotate an activation with logical dim names (no-op outside a rule ctx).
+
+    Uses non-strict rules: uneven constraint shardings are allowed (GSPMD
+    pads) so e.g. 28 attention heads still spread over a 16-way model axis.
+    """
+    rules = active_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(names, x.shape, strict=False)
+    )

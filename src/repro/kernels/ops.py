@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels always run in interpret mode (the kernel
+body executes as traced jnp ops); on a real TPU set REPRO_PALLAS_COMPILE=1 to
+lower them through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ssd_scan import ssd_scan_fwd
+from repro.kernels.token_logprob import fused_token_logprob_fwd
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, window: int = 0, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128):
+    """Causal GQA flash attention. q (B,S,H,D), k/v (B,S,Hk,D) -> (B,S,H,D)."""
+    return flash_attention_fwd(q, k, v, window=window, causal=causal,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A_log, Bm, Cm, chunk: int = 64, D=None):
+    """Mamba2 SSD chunked scan. Returns (y, final_state)."""
+    return ssd_scan_fwd(x, dt, A_log, Bm, Cm, chunk=chunk, D=D,
+                        interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_v"))
+def fused_token_logprob(logits, labels, block_rows: int = 256,
+                        block_v: int = 2048):
+    """Streaming log p(label) without materializing log-softmax."""
+    return fused_token_logprob_fwd(logits, labels, block_rows=block_rows,
+                                   block_v=block_v, interpret=_interpret())

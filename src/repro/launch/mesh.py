@@ -1,0 +1,32 @@
+"""Production meshes (brief: MULTI-POD DRY-RUN step 1).
+
+Functions, not module-level constants — importing this module never touches
+jax device state.  Target hardware: TPU v5e pods, 256 chips/pod.
+  single-pod : (16, 16)        axes ("data", "model")
+  multi-pod  : (2, 16, 16)     axes ("pod", "data", "model")
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            f"run under launch/dryrun.py (forces "
+            f"--xla_force_host_platform_device_count=512)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_debug_mesh(model: int = 2, data: int = 2):
+    """Tiny mesh for CPU sharding tests (requires forced host devices)."""
+    n = model * data
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:n])

@@ -1,0 +1,84 @@
+"""Sharding specs for every dry-run input: params, optimizer state, batches,
+and decode caches (logical-axis tails matched by cache leaf name)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ShardingRules
+
+# cache-leaf logical tails, right-aligned onto the leaf rank
+_CACHE_TAILS = {
+    "k": ("batch", "seq", "kv_heads", None),
+    "v": ("batch", "seq", "kv_heads", None),
+    "ckv": ("batch", "seq", None),
+    "krope": ("batch", "seq", None),
+    "conv": ("batch", None, "ssm_inner"),
+    "state": ("batch", "heads", None, None),
+}
+_POS_TAILS = {2: ("batch", "seq"), 1: ("batch",)}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        key = getattr(p, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def cache_shardings(rules: ShardingRules, cache_struct):
+    def leaf_spec(path, leaf):
+        name = _leaf_name(path)
+        if name == "pos":
+            tail = _POS_TAILS[min(leaf.ndim, 2)] if leaf.ndim <= 2 else \
+                _POS_TAILS[2]
+        else:
+            tail = _CACHE_TAILS[name]
+        tail = tail[-leaf.ndim:] if len(tail) > leaf.ndim else tail
+        axes = (None,) * (leaf.ndim - len(tail)) + tuple(tail)
+        return rules.sharding(axes, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_struct)
+
+
+def batch_shardings(rules: ShardingRules, batch_struct):
+    """Train/prefill batches: dim0 = batch, dim1 = seq, rest replicated."""
+    def leaf_spec(path, leaf):
+        name = _leaf_name(path)
+        if name in _CACHE_TAILS or name == "pos":
+            return None  # handled by cache_shardings
+        axes = ("batch", "seq", None)[: leaf.ndim] + (None,) * max(
+            0, leaf.ndim - 3)
+        return rules.sharding(tuple(axes), leaf.shape)
+
+    out = {}
+    for k, v in batch_struct.items():
+        if k == "cache":
+            out[k] = cache_shardings(rules, v)
+        elif k == "cross_kv":
+            # (k,v) each (L,B,M,Hk,hd)
+            out[k] = jax.tree_util.tree_map(
+                lambda leaf: rules.sharding(
+                    (None, "batch", None, "kv_heads", None)[: leaf.ndim],
+                    leaf.shape), v)
+        else:
+            out[k] = jax.tree_util.tree_map_with_path(leaf_spec, v)
+    return out
+
+
+def opt_state_shardings(rules: ShardingRules, model):
+    """AdamW m/v mirror the param shardings; step is replicated."""
+    pspecs = rules.specs_to_shardings(model.specs())
+    return {
+        "m": pspecs,
+        "v": pspecs,
+        "step": NamedSharding(rules.mesh, P()),
+    }
+
+
+def replicated(rules: ShardingRules):
+    return NamedSharding(rules.mesh, P())

@@ -1,0 +1,4 @@
+from repro.models.model import Model
+from repro.models.params import ParamSpec, abstract_params, init_params, param_count
+
+__all__ = ["Model", "ParamSpec", "abstract_params", "init_params", "param_count"]

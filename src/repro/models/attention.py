@@ -1,0 +1,435 @@
+"""Attention: GQA (qk-norm / qkv-bias / sliding-window) and MLA (DeepSeek-V2).
+
+One ``apply`` covers train (full-seq causal), prefill (full-seq causal +
+returns a filled cache) and decode (q_len tokens against a cache).  Caches are
+plain dicts (pytree-friendly; dry-runnable as ShapeDtypeStructs):
+
+  GQA : {"k": (B,M,Hk,D), "v": (B,M,Hk,Dv), "pos": (B,M) int32}
+  MLA : {"ckv": (B,M,R), "krope": (B,M,Dr), "pos": (B,M) int32}
+
+``pos`` holds the absolute position stored in each slot (-1 = empty); sliding
+windows use a ring buffer (slot = pos % window) which keeps the long-context
+decode cache O(window) — this is the sub-quadratic variant used by long_500k.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_specs, rope_angles
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- specs
+def attention_specs(cfg) -> dict:
+    d = cfg.d_model
+    if cfg.uses_mla:
+        specs = {
+            "kv_a": ParamSpec((d, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                              ("embed_p", "kv_lora"), init="scaled"),
+            "kv_a_norm": rmsnorm_specs(cfg.kv_lora_rank)["scale"],
+            "k_b": ParamSpec((cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_dim),
+                             ("kv_lora", "heads", None), init="scaled"),
+            "v_b": ParamSpec((cfg.kv_lora_rank, cfg.n_heads, cfg.v_head_dim),
+                             ("kv_lora", "heads", None), init="scaled"),
+            "o": ParamSpec((cfg.n_heads, cfg.v_head_dim, d),
+                           ("heads", None, "embed_p"), init="scaled",
+                           fan_in_axes=(0, 1)),
+        }
+        qd = cfg.qk_nope_dim + cfg.qk_rope_head_dim
+        if cfg.q_lora_rank:
+            specs["q_a"] = ParamSpec((d, cfg.q_lora_rank), ("embed_p", None), init="scaled")
+            specs["q_a_norm"] = rmsnorm_specs(cfg.q_lora_rank)["scale"]
+            specs["q_b"] = ParamSpec((cfg.q_lora_rank, cfg.n_heads, qd),
+                                     (None, "heads", None), init="scaled")
+        else:
+            specs["q"] = ParamSpec((d, cfg.n_heads, qd), ("embed_p", "heads", None),
+                                   init="scaled")
+        return specs
+
+    hd, vd = cfg.head_dim, cfg.v_dim
+    specs = {
+        "q": ParamSpec((d, cfg.n_heads, hd), ("embed_p", "heads", None), init="scaled"),
+        "k": ParamSpec((d, cfg.n_kv_heads, hd), ("embed_p", "kv_heads", None), init="scaled"),
+        "v": ParamSpec((d, cfg.n_kv_heads, vd), ("embed_p", "kv_heads", None), init="scaled"),
+        "o": ParamSpec((cfg.n_heads, vd, d), ("heads", None, "embed_p"),
+                       init="scaled", fan_in_axes=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        specs["q_bias"] = ParamSpec((cfg.n_heads, hd), ("heads", None), init="zeros")
+        specs["k_bias"] = ParamSpec((cfg.n_kv_heads, hd), ("kv_heads", None), init="zeros")
+        specs["v_bias"] = ParamSpec((cfg.n_kv_heads, vd), ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = rmsnorm_specs(hd)["scale"]
+        specs["k_norm"] = rmsnorm_specs(hd)["scale"]
+    return specs
+
+
+def cross_attention_specs(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "q": ParamSpec((d, cfg.n_heads, hd), ("embed_p", "heads", None), init="scaled"),
+        "k": ParamSpec((d, cfg.n_kv_heads, hd), ("embed_p", "kv_heads", None), init="scaled"),
+        "v": ParamSpec((d, cfg.n_kv_heads, hd), ("embed_p", "kv_heads", None), init="scaled"),
+        "o": ParamSpec((cfg.n_heads, hd, d), ("heads", None, "embed_p"),
+                       init="scaled", fan_in_axes=(0, 1)),
+    }
+
+
+# ---------------------------------------------------------------- caches
+def init_kv_cache(cfg, batch: int, max_len: int, window: int = 0) -> dict:
+    m = min(max_len, window) if window else max_len
+    dt = cfg.activation_dtype
+    pos = jnp.full((batch, m), -1, jnp.int32)
+    if cfg.uses_mla:
+        return {
+            "ckv": jnp.zeros((batch, m, cfg.kv_lora_rank), dt),
+            "krope": jnp.zeros((batch, m, cfg.qk_rope_head_dim), dt),
+            "pos": pos,
+        }
+    return {
+        "k": jnp.zeros((batch, m, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, m, cfg.n_kv_heads, cfg.v_dim), dt),
+        "pos": pos,
+    }
+
+
+def kv_cache_specs(cfg, batch: int, max_len: int, window: int = 0) -> dict:
+    """ShapeDtypeStruct cache stand-ins for the dry-run."""
+    cache = jax.eval_shape(lambda: init_kv_cache(cfg, batch, max_len, window))
+    return cache
+
+
+def _scatter_cache(buf: jax.Array, new: jax.Array, slots: jax.Array) -> jax.Array:
+    """buf (B,M,...), new (B,Q,...), slots (B,Q) int32 -> buf with rows written."""
+    b_idx = jnp.arange(buf.shape[0])[:, None]
+    return buf.at[b_idx, slots].set(new.astype(buf.dtype))
+
+
+# ---------------------------------------------------------------- blockwise attn
+def blockwise_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
+                        causal: bool = True, block_q: int = 512,
+                        block_k: int = 1024, scale: float = 1.0,
+                        unroll: bool = False, accum_dtype=jnp.float32):
+    """Memory-O(block) attention in pure JAX (online softmax over kv tiles).
+
+    Flat-head layout (GQA pre-expanded so the head dim shards over "model"):
+      q (B,Q,H,D), k/v (B,M,H,D), q_pos (B,Q), k_pos (B,M) -> (B,Q,H,Dv).
+
+    This is the XLA-compilable twin of kernels/flash_attention.py — used by
+    train/prefill at long sequence lengths where materializing (Q,M) scores
+    cannot fit HBM.  ``unroll`` replaces the scans with python loops for the
+    dry-run cost extrapolation (no `while` in the HLO).
+    """
+    B, Q, H, D = q.shape
+    M = k.shape[1]
+    Dv = v.shape[-1]
+    block_q = min(block_q, Q)
+    block_k = min(block_k, M)
+    pad_q = (-Q) % block_q
+    pad_k = (-M) % block_k
+    f32 = jnp.float32
+    adt = jnp.dtype(accum_dtype)   # dtype of the big q/k/v/p tiles
+
+    qt = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    kt = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    qp = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    kp = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+    nQ, nK = (Q + pad_q) // block_q, (M + pad_k) // block_k
+
+    qb = qt.reshape(B, H, nQ, block_q, D)
+    kb = kt.reshape(B, H, nK, block_k, D)
+    vb = vt.reshape(B, H, nK, block_k, Dv)
+    qpb = qp.reshape(B, nQ, block_q)
+    kpb = kp.reshape(B, nK, block_k)
+
+    def q_block(q_cur, qp_cur):
+        def kv_step(carry, j):
+            m_run, l_run, acc = carry
+            k_j = kb[:, :, j].astype(adt)                   # (B,H,BK,D)
+            v_j = vb[:, :, j].astype(adt)
+            kp_j = kpb[:, j]                                # (B,BK)
+            # scores + softmax state stay f32 (numerics); tiles in adt
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_cur.astype(adt), k_j,
+                           preferred_element_type=jnp.float32) * scale
+            mask = (kp_j >= 0)[:, None, None, :]
+            if causal:
+                mask &= kp_j[:, None, None, :] <= qp_cur[:, None, :, None]
+            if window:
+                mask &= (kp_j[:, None, None, :]
+                         > qp_cur[:, None, :, None] - window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkv->bhqv", p.astype(adt), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, H, block_q), NEG_INF, f32),
+                jnp.zeros((B, H, block_q), f32),
+                jnp.zeros((B, H, block_q, Dv), f32))
+        if unroll:
+            carry = init
+            for j in range(nK):
+                carry, _ = kv_step(carry, j)
+        else:
+            carry, _ = jax.lax.scan(kv_step, init, jnp.arange(nK))
+        m_f, l_f, acc = carry
+        return acc / jnp.maximum(l_f, 1e-30)[..., None]
+
+    if unroll:
+        outs = [q_block(qb[:, :, i].astype(f32), qpb[:, i]) for i in range(nQ)]
+        out = jnp.stack(outs, axis=2)                       # (B,H,nQ,BQ,Dv)
+    else:
+        def q_step(_, xs):
+            q_i, qp_i = xs
+            return None, q_block(q_i.astype(f32), qp_i)
+        _, out = jax.lax.scan(
+            q_step, None,
+            (jnp.moveaxis(qb, 2, 0), jnp.moveaxis(qpb, 1, 0)))
+        out = jnp.moveaxis(out, 0, 2)                       # (B,H,nQ,BQ,Dv)
+    out = out.reshape(B, H, Q + pad_q, Dv)[:, :, :Q]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- core attn math
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Hk,G,Q,D) k (B,Hk,M,D) v (B,Hk,M,Dv) mask (B,1,1,Q,M) -> (B,Hk,G,Q,Dv)."""
+    scores = jnp.einsum("bkgqd,bkmd->bkgqm", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqm,bkmv->bkgqv", w, v)
+
+
+def _causal_mask(q_pos, k_pos, window: int):
+    """q_pos (B,Q), k_pos (B,M) -> (B,1,1,Q,M) bool."""
+    q_ = q_pos[:, None, None, :, None]
+    k_ = k_pos[:, None, None, None, :]
+    mask = (k_ <= q_) & (k_ >= 0)
+    if window:
+        mask &= k_ > q_ - window
+    return mask
+
+
+# ---------------------------------------------------------------- GQA apply
+def gqa_apply(params, cfg, x, positions, cache=None, window: int = 0,
+              causal: bool = True, use_flash: bool = False, kv_valid=None):
+    """x (B,Q,d), positions (B,Q).  Returns (out, new_cache).
+
+    ``kv_valid`` (B,Q) bool marks right-pad positions in ragged rollout
+    batches: invalid positions are stored with pos=-1 (never attended).
+    """
+    B, Q, _ = x.shape
+    H, Hk, hd, vd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_dim
+    G = H // Hk
+    dt = x.dtype
+
+    q = jnp.einsum("bqd,dhe->bqhe", x, params["q"].astype(dt))
+    k = jnp.einsum("bqd,dhe->bqhe", x, params["k"].astype(dt))
+    v = jnp.einsum("bqd,dhe->bqhe", x, params["v"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["q_bias"].astype(dt)
+        k = k + params["k_bias"].astype(dt)
+        v = v + params["v_bias"].astype(dt)
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": params["q_norm"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": params["k_norm"]}, k, cfg.norm_eps)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = shard_hint(q, ("batch", "seq", "heads", None))
+    k = shard_hint(k, ("batch", "seq", "kv_heads", None))
+
+    new_cache = None
+    if cache is not None:
+        M = cache["k"].shape[1]
+        slots = positions % M
+        store_pos = (positions if kv_valid is None
+                     else jnp.where(kv_valid, positions, -1))
+        ck = _scatter_cache(cache["k"], k, slots)
+        cv = _scatter_cache(cache["v"], v, slots)
+        cpos = cache["pos"].at[jnp.arange(B)[:, None], slots].set(store_pos)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        k_all, v_all, k_pos = ck, cv, cpos
+    else:
+        k_pos = (positions if kv_valid is None
+                 else jnp.where(kv_valid, positions, -1))
+        k_all, v_all = k, v
+
+    if use_flash and cache is None and causal and kv_valid is None:
+        from repro.kernels.ops import flash_attention
+        out = flash_attention(q, k_all, v_all, window=window)
+    elif cache is None and causal and Q > 1024:
+        # long-sequence train/prefill: blockwise (online-softmax) attention —
+        # materializing (Q,M) scores would not fit HBM at 4k-32k
+        k_exp = jnp.repeat(k_all, G, axis=2)                # (B,M,H,hd)
+        v_exp = jnp.repeat(v_all, G, axis=2)
+        k_exp = shard_hint(k_exp, ("batch", "seq", "heads", None))
+        v_exp = shard_hint(v_exp, ("batch", "seq", "heads", None))
+        out = blockwise_attention(q, k_exp, v_exp, positions, k_pos,
+                                  window=window, causal=True,
+                                  scale=1.0 / math.sqrt(hd),
+                                  block_q=cfg.attn_block_q,
+                                  block_k=cfg.attn_block_k,
+                                  unroll=cfg.unroll_scans,
+                                  accum_dtype=jnp.dtype(cfg.accum_dtype))
+    else:
+        mask = (_causal_mask(positions, k_pos, window) if causal else
+                (k_pos[:, None, None, None, :] >= 0))
+        qh = q.reshape(B, Q, Hk, G, hd).transpose(0, 2, 3, 1, 4)
+        out = _sdpa(qh, k_all.transpose(0, 2, 1, 3), v_all.transpose(0, 2, 1, 3),
+                    mask, 1.0 / math.sqrt(hd))
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, Q, H, vd)
+
+    out = jnp.einsum("bqhe,hed->bqd", out, params["o"].astype(dt))
+    return shard_hint(out, ("batch", "seq", "embed")), new_cache
+
+
+# ---------------------------------------------------------------- MLA apply
+def mla_apply(params, cfg, x, positions, cache=None, window: int = 0,
+              kv_valid=None):
+    """DeepSeek-V2 multi-head latent attention.
+
+    Train/prefill: expanded path (materialize per-head K/V from the latent).
+    Decode (q_len small w/ cache): absorbed path — queries are mapped into the
+    latent space so attention reads the compressed cache directly.
+    """
+    B, Q, _ = x.shape
+    H = cfg.n_heads
+    nd, rd, vd, R = cfg.qk_nope_dim, cfg.qk_rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    dt = x.dtype
+    scale = 1.0 / math.sqrt(nd + rd)
+
+    # ---- queries
+    if cfg.q_lora_rank:
+        qa = rmsnorm({"scale": params["q_a_norm"]}, x @ params["q_a"].astype(dt),
+                     cfg.norm_eps)
+        q = jnp.einsum("bqr,rhe->bqhe", qa, params["q_b"].astype(dt))
+    else:
+        q = jnp.einsum("bqd,dhe->bqhe", x, params["q"].astype(dt))
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    cos, sin = rope_angles(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    # ---- compressed kv
+    kv = x @ params["kv_a"].astype(dt)
+    ckv, k_rope = kv[..., :R], kv[..., R:]
+    ckv = rmsnorm({"scale": params["kv_a_norm"]}, ckv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]  # shared head
+
+    new_cache = None
+    if cache is not None:
+        M = cache["ckv"].shape[1]
+        slots = positions % M
+        store_pos = (positions if kv_valid is None
+                     else jnp.where(kv_valid, positions, -1))
+        cc = _scatter_cache(cache["ckv"], ckv, slots)
+        cr = _scatter_cache(cache["krope"], k_rope, slots)
+        cpos = cache["pos"].at[jnp.arange(B)[:, None], slots].set(store_pos)
+        new_cache = {"ckv": cc, "krope": cr, "pos": cpos}
+        ckv_all, krope_all, k_pos = cc, cr, cpos
+    else:
+        k_pos = (positions if kv_valid is None
+                 else jnp.where(kv_valid, positions, -1))
+        ckv_all, krope_all = ckv, k_rope
+
+    if cache is not None and Q <= 8:
+        mask = _causal_mask(positions, k_pos, window)[:, 0, 0]  # (B,Q,M)
+        # absorbed decode path: score in latent space
+        q_lat = jnp.einsum("bqhe,rhe->bqhr", q_nope, params["k_b"].astype(dt))
+        scores = (jnp.einsum("bqhr,bmr->bhqm", q_lat, ckv_all)
+                  + jnp.einsum("bqhe,bme->bhqm", q_rope, krope_all))
+        scores = scores.astype(jnp.float32) * scale
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(dt)
+        ctx = jnp.einsum("bhqm,bmr->bqhr", w, ckv_all)
+        out = jnp.einsum("bqhr,rhe->bqhe", ctx, params["v_b"].astype(dt))
+    elif Q > 1024:
+        # long-sequence expanded path, blockwise: build per-head K=[k_nope;
+        # k_rope], Q=[q_nope; q_rope] and stream kv tiles
+        k_nope = jnp.einsum("bmr,rhe->bmhe", ckv_all, params["k_b"].astype(dt))
+        v = jnp.einsum("bmr,rhe->bmhe", ckv_all, params["v_b"].astype(dt))
+        k_nope = shard_hint(k_nope, ("batch", "seq", "heads", None))
+        v = shard_hint(v, ("batch", "seq", "heads", None))
+        M = k_nope.shape[1]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope_all[:, :, None, :],
+                                      (B, M, H, rd))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = blockwise_attention(q_full, k_full, v, positions, k_pos,
+                                  window=window, causal=True, scale=scale,
+                                  block_q=cfg.attn_block_q,
+                                  block_k=cfg.attn_block_k,
+                                  unroll=cfg.unroll_scans,
+                                  accum_dtype=jnp.dtype(cfg.accum_dtype))
+    else:
+        # expanded path
+        mask = _causal_mask(positions, k_pos, window)[:, 0, 0]  # (B,Q,M)
+        k_nope = jnp.einsum("bmr,rhe->bmhe", ckv_all, params["k_b"].astype(dt))
+        v = jnp.einsum("bmr,rhe->bmhe", ckv_all, params["v_b"].astype(dt))
+        k_nope = shard_hint(k_nope, ("batch", "seq", "heads", None))
+        scores = (jnp.einsum("bqhe,bmhe->bhqm", q_nope, k_nope)
+                  + jnp.einsum("bqhe,bme->bhqm", q_rope, krope_all))
+        scores = scores.astype(jnp.float32) * scale
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = jnp.einsum("bhqm,bmhe->bqhe", w, v)
+
+    out = jnp.einsum("bqhe,hed->bqd", out, params["o"].astype(dt))
+    return shard_hint(out, ("batch", "seq", "embed")), new_cache
+
+
+# ---------------------------------------------------------------- cross-attn
+def cross_attention_apply(params, cfg, x, enc_kv):
+    """x (B,Q,d); enc_kv = (k,v) each (B,M,Hk,hd) precomputed from encoder out."""
+    B, Q, _ = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hk
+    dt = x.dtype
+    q = jnp.einsum("bqd,dhe->bqhe", x, params["q"].astype(dt))
+    k, v = enc_kv
+    M = k.shape[1]
+    if Q > 2048:
+        # long decoder sequences: stream q blocks (scores (Q,M) won't fit)
+        k_exp = jnp.repeat(k, G, axis=2)
+        v_exp = jnp.repeat(v, G, axis=2)
+        q_pos = jnp.broadcast_to(jnp.arange(Q, dtype=jnp.int32), (B, Q))
+        k_pos = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32), (B, M))
+        out = blockwise_attention(q, k_exp, v_exp, q_pos, k_pos,
+                                  causal=False, scale=1.0 / math.sqrt(hd),
+                                  block_q=cfg.attn_block_q,
+                                  block_k=cfg.attn_block_k,
+                                  unroll=cfg.unroll_scans,
+                                  accum_dtype=jnp.dtype(cfg.accum_dtype))
+    else:
+        mask = jnp.ones((B, 1, 1, Q, M), bool)
+        qh = q.reshape(B, Q, Hk, G, hd).transpose(0, 2, 3, 1, 4)
+        out = _sdpa(qh, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                    mask, 1.0 / math.sqrt(hd))
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, Q, H, hd)
+    return jnp.einsum("bqhe,hed->bqd", out, params["o"].astype(dt))
+
+
+def encode_cross_kv(params, cfg, enc_out):
+    dt = enc_out.dtype
+    k = jnp.einsum("bmd,dhe->bmhe", enc_out, params["k"].astype(dt))
+    v = jnp.einsum("bmd,dhe->bmhe", enc_out, params["v"].astype(dt))
+    return k, v
+
+
+def attention_apply(params, cfg, x, positions, cache=None, window: int = 0,
+                    causal: bool = True, use_flash: bool = False, kv_valid=None):
+    if cfg.uses_mla:
+        return mla_apply(params, cfg, x, positions, cache=cache, window=window,
+                         kv_valid=kv_valid)
+    return gqa_apply(params, cfg, x, positions, cache=cache, window=window,
+                     causal=causal, use_flash=use_flash, kv_valid=kv_valid)

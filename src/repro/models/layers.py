@@ -1,0 +1,83 @@
+"""Common layers: RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+Each module exposes ``*_specs(cfg)`` (ParamSpec pytree) and an ``apply``
+function.  Compute runs in the config's activation dtype; norms/softmax in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+from repro.distributed.sharding import shard_hint
+
+
+# ---------------------------------------------------------------- RMSNorm
+def rmsnorm_specs(dim: int) -> dict:
+    return {"scale": ParamSpec((dim,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple:
+    """positions (...,) -> (cos, sin) of shape (..., dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., H, D); cos/sin broadcastable to (..., 1, D//2)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------- MLP (SwiGLU)
+def mlp_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "gate": ParamSpec((d_model, d_ff), ("embed_p", "mlp"), init="scaled"),
+        "up": ParamSpec((d_model, d_ff), ("embed_p", "mlp"), init="scaled"),
+        "down": ParamSpec((d_ff, d_model), ("mlp", "embed_p"), init="scaled"),
+    }
+
+
+def mlp(params, x):
+    h = jax.nn.silu(x @ params["gate"].astype(x.dtype)) * (x @ params["up"].astype(x.dtype))
+    h = shard_hint(h, ("batch", "seq", "mlp"))
+    return h @ params["down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embeddings
+def embedding_specs(cfg) -> dict:
+    specs = {"embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed_p"),
+                                init="normal")}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                     ("embed_p", "vocab"), init="scaled")
+    return specs
+
+
+def embed_tokens(params, cfg, tokens):
+    x = params["embed"].astype(cfg.activation_dtype)[tokens]
+    return shard_hint(x, ("batch", "seq", "embed"))
+
+
+def unembed(params, cfg, x):
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype).T
+    else:
+        w = params["unembed"].astype(x.dtype)
+    logits = x @ w
+    return shard_hint(logits, ("batch", "seq", "vocab"))

@@ -1,0 +1,213 @@
+"""Unified Model facade over every architecture family.
+
+``Model(cfg)`` exposes:
+  specs() / init(key) / abstract()          parameters
+  apply(params, batch, caches=None, ...)    logits for train/prefill
+  decode_step(params, tokens, positions, caches)  one-token decode
+  init_cache / cache_struct                 decode caches (KV / SSM / hybrid)
+  input_specs(shape_name)                   ShapeDtypeStruct stand-ins (dry-run)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as ATT
+from repro.models import ssm as SSM
+from repro.models import transformer as T
+from repro.models.params import abstract_params, init_params, param_count
+
+
+def _bcast_stack(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---------------------------------------------------------- params
+    def specs(self):
+        c = self.cfg
+        if c.family in ("dense", "moe", "vlm"):
+            return T.lm_specs(c)
+        if c.family == "ssm":
+            return T.mamba_lm_specs(c)
+        if c.family == "hybrid":
+            return T.zamba_specs(c)
+        if c.family == "encdec":
+            return T.encdec_specs(c)
+        raise ValueError(c.family)
+
+    def init(self, key):
+        return init_params(key, self.specs())
+
+    def abstract(self):
+        return abstract_params(self.specs())
+
+    def n_params(self) -> int:
+        return param_count(self.specs())
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: routed top-k only)."""
+        c = self.cfg
+        total = param_count(self.specs())
+        if not c.n_experts:
+            return total
+        from repro.models.moe import moe_specs
+        from repro.models.params import param_count as pc
+        expert_block = pc({k: v for k, v in moe_specs(c).items()
+                           if k in ("gate", "up", "down")})
+        n_moe_layers = c.n_layers - c.first_k_dense
+        inactive = expert_block * n_moe_layers * (
+            (c.n_experts - c.moe_top_k) / c.n_experts)
+        return int(total - inactive)
+
+    # ---------------------------------------------------------- forward
+    def apply(self, params, batch: dict, caches=None, positions=None,
+              window: int = 0, use_flash: bool = False, use_kernel: bool = False,
+              moe_dense_ref: bool = False, kv_valid=None,
+              last_token_only=False):
+        """Full-sequence forward (train / prefill).
+
+        Returns (logits, aux_loss, new_caches).  ``batch`` carries "tokens"
+        and, for vlm/encdec, "prefix_embeds".
+        """
+        c = self.cfg
+        if c.family in ("dense", "moe", "vlm"):
+            return T.lm_apply(params, c, batch["tokens"], positions=positions,
+                              prefix_embeds=batch.get("prefix_embeds"),
+                              caches=caches, window=window, use_flash=use_flash,
+                              moe_dense_ref=moe_dense_ref, kv_valid=kv_valid,
+                              last_token_only=last_token_only)
+        if c.family == "ssm":
+            return T.mamba_lm_apply(params, c, batch["tokens"],
+                                    caches=caches, use_kernel=use_kernel,
+                                    kv_valid=kv_valid,
+                                    last_token_only=last_token_only)
+        if c.family == "hybrid":
+            return T.zamba_apply(params, c, batch["tokens"], positions=positions,
+                                 caches=caches, window=window,
+                                 use_flash=use_flash, use_kernel=use_kernel,
+                                 kv_valid=kv_valid,
+                                 last_token_only=last_token_only)
+        if c.family == "encdec":
+            return T.encdec_apply(params, c, batch["tokens"],
+                                  prefix_embeds=batch["prefix_embeds"],
+                                  positions=positions, caches=caches,
+                                  window=window, use_flash=use_flash,
+                                  kv_valid=kv_valid,
+                                  last_token_only=last_token_only)
+        raise ValueError(c.family)
+
+    def decode_step(self, params, tokens, positions, caches, window: int = 0,
+                    cross_kv=None, kv_valid=None):
+        """tokens (B,Q small), positions (B,Q) -> (logits, new_caches)."""
+        c = self.cfg
+        if c.family == "encdec":
+            logits, _, nc = T.encdec_decode_stack(
+                params, c, tokens, cross_kv, positions=positions,
+                caches=caches, window=window, kv_valid=kv_valid)
+            return logits, nc
+        logits, _, nc = self.apply(params, {"tokens": tokens}, caches=caches,
+                                   positions=positions, window=window,
+                                   kv_valid=kv_valid)
+        return logits, nc
+
+    # ---------------------------------------------------------- caches
+    def init_cache(self, batch: int, max_len: int, window: int = 0):
+        c = self.cfg
+        if c.family in ("dense", "moe", "vlm", "encdec"):
+            n_stack = (c.n_layers - c.first_k_dense
+                       if c.family != "encdec" else c.n_layers)
+            single = ATT.init_kv_cache(c, batch, max_len, window)
+            out = {"stack": _bcast_stack(single, n_stack)}
+            if c.first_k_dense and c.family != "encdec":
+                out["dense"] = [ATT.init_kv_cache(c, batch, max_len, window)
+                                for _ in range(c.first_k_dense)]
+            return out
+        if c.family == "ssm":
+            single = SSM.init_ssm_cache(c, batch)
+            return {"stack": _bcast_stack(single, c.n_layers)}
+        if c.family == "hybrid":
+            G = c.n_layers // c.attn_every
+            mamba = _bcast_stack(_bcast_stack(SSM.init_ssm_cache(c, batch),
+                                              c.attn_every), G)
+            kv = _bcast_stack(ATT.init_kv_cache(c, batch, max_len, window), G)
+            return {"stack": {"mamba": mamba, "attn": kv}}
+        raise ValueError(c.family)
+
+    def cache_struct(self, batch: int, max_len: int, window: int = 0):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len, window))
+
+    # ---------------------------------------------------------- dry-run inputs
+    def input_specs(self, shape_name: str, variant: str = "baseline") -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of a given
+        (shape, kind).  See configs.INPUT_SHAPES."""
+        from repro.configs import INPUT_SHAPES
+        c = self.cfg
+        info = INPUT_SHAPES[shape_name]
+        B, S, kind = info["global_batch"], info["seq_len"], info["kind"]
+        i32 = jnp.int32
+        f32 = jnp.float32
+        sds = jax.ShapeDtypeStruct
+
+        def with_prefix(d, n_text):
+            if c.family in ("vlm", "encdec"):
+                d["prefix_embeds"] = sds((B, c.n_prefix_embeds,
+                                          T.PREFIX_EMBED_DIM), f32)
+            return d
+
+        if kind == "train":
+            n_text = S - (c.n_prefix_embeds if c.family == "vlm" else 0)
+            batch = {
+                "tokens": sds((B, n_text), i32),
+                "loss_mask": sds((B, n_text), f32),
+                "advantages": sds((B,), f32),
+                "old_logprobs": sds((B, n_text), f32),
+                "ref_logprobs": sds((B, n_text), f32),
+            }
+            return with_prefix(batch, n_text)
+        if kind == "prefill":
+            n_text = S - (c.n_prefix_embeds if c.family == "vlm" else 0)
+            return with_prefix({"tokens": sds((B, n_text), i32)}, n_text)
+        if kind == "decode":
+            window = self.decode_window(shape_name)
+            batch = {
+                "tokens": sds((B, 1), i32),
+                "positions": sds((B, 1), i32),
+                "cache": self.cache_struct(B, S, window),
+            }
+            if c.family == "encdec":
+                kv = jax.eval_shape(
+                    lambda p, e: T.encdec_cross_kv(p, c, e),
+                    self.abstract(),
+                    sds((B, c.n_prefix_embeds, c.d_model), c.activation_dtype))
+                batch["cross_kv"] = kv
+            return batch
+        raise ValueError(kind)
+
+    def decode_window(self, shape_name: str) -> int:
+        """Effective attention window for a decode shape (0 = full cache)."""
+        c = self.cfg
+        from repro.configs import INPUT_SHAPES
+        S = INPUT_SHAPES[shape_name]["seq_len"]
+        if shape_name == "long_500k":
+            if c.long_context_window == 0:
+                raise ValueError(
+                    f"{c.arch_id} does not support long_500k (see DESIGN.md)")
+            if c.long_context_window > 0:
+                return c.long_context_window
+            return 0  # natively sub-quadratic (ssm)
+        return c.sliding_window or 0
+
+    def supports(self, shape_name: str) -> bool:
+        c = self.cfg
+        if shape_name == "long_500k":
+            return c.long_context_window != 0
+        return True

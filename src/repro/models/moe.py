@@ -1,0 +1,161 @@
+"""Mixture-of-Experts: top-k router + capacity-based grouped expert matmul.
+
+Dispatch is sort-based (argsort tokens by expert, equal per-expert capacity
+slices) so the expert FLOPs are the *active* FLOPs — E x C x d x f — rather
+than the dense all-experts product.  Expert weights are stacked on dim 0 with
+logical axis "experts" (expert-parallel over the "model" mesh axis); GSPMD
+turns the gather/scatter into the all-to-all the paper's MoE archs need.
+
+Tokens beyond an expert's capacity are dropped (standard capacity-factor MoE);
+``moe_apply_dense`` is the droppless O(E) reference used by unit tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models.params import ParamSpec
+
+
+def moe_specs(cfg) -> dict:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    specs = {
+        "router": ParamSpec((d, E), ("embed_p", "experts"), init="scaled"),
+        "gate": ParamSpec((E, d, f), ("experts", "embed_p", None),
+                          init="scaled", fan_in_axes=(1,)),
+        "up": ParamSpec((E, d, f), ("experts", "embed_p", None),
+                        init="scaled", fan_in_axes=(1,)),
+        "down": ParamSpec((E, f, d), ("experts", None, "embed_p"),
+                          init="scaled", fan_in_axes=(1,)),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        specs["shared_gate"] = ParamSpec((d, fs), ("embed_p", "mlp"), init="scaled")
+        specs["shared_up"] = ParamSpec((d, fs), ("embed_p", "mlp"), init="scaled")
+        specs["shared_down"] = ParamSpec((fs, d), ("mlp", "embed_p"), init="scaled")
+    return specs
+
+
+def _router(params, cfg, x_flat):
+    """x_flat (T,d) -> (probs (T,E) f32, topk_idx (T,K), topk_w (T,K) f32)."""
+    logits = (x_flat @ params["router"].astype(x_flat.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    topk_w = topk_w / jnp.sum(topk_w, axis=-1, keepdims=True)
+    return probs, topk_idx, topk_w
+
+
+def router_aux_loss(probs: jax.Array, topk_idx: jax.Array, n_experts: int):
+    """Switch-style load-balance loss: E * sum_e f_e * P_e."""
+    T = probs.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[topk_idx.reshape(-1)].add(1.0)
+    frac_tokens = counts / (T * topk_idx.shape[-1])
+    frac_probs = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def _expert_ffn(params, xe):
+    """xe (E,C,d) -> (E,C,d), per-expert SwiGLU."""
+    dt = xe.dtype
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["gate"].astype(dt)))
+         * jnp.einsum("ecd,edf->ecf", xe, params["up"].astype(dt)))
+    h = shard_hint(h, ("experts", None, None))
+    return jnp.einsum("ecf,efd->ecd", h, params["down"].astype(dt))
+
+
+def moe_apply(params, cfg, x):
+    """x (B,S,d) -> (out (B,S,d), aux_loss scalar).
+
+    Per-row dispatch (GSPMD-friendly): every index computation (cumsum,
+    gather, scatter) happens *within* a batch row, so it stays shard-local
+    under batch sharding; the only cross-shard movement is the
+    batch-sharded -> expert-sharded einsum transition, which lowers to the
+    MoE all-to-all.  Capacity binds per (row, expert): C = S*K*cf/E.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    C = max(1, min(S * K, int(S * K * cfg.capacity_factor / E)))
+
+    probs, topk_idx, topk_w = _router(params, cfg, x.reshape(B * S, d))
+    aux = router_aux_loss(probs, topk_idx, E)
+    topk_idx = topk_idx.reshape(B, S * K)                    # pairs per row
+    topk_w = topk_w.reshape(B, S * K)
+
+    # ---- gather-only dispatch (no scatters: GSPMD partitions row-local
+    # sorts and take_along_axis gathers along batch; scatters with explicit
+    # batch indices were replicating the residual — EXPERIMENTS.md §Perf)
+    SK = S * K
+    pair_token = (jnp.arange(SK) // K)[None, :]              # (1,SK) in-row
+    order = jnp.argsort(topk_idx, axis=1, stable=True)       # sort by expert
+    sorted_expert = jnp.take_along_axis(topk_idx, order, axis=1)
+    sorted_token = jnp.take_along_axis(
+        jnp.broadcast_to(pair_token, (B, SK)), order, axis=1)
+    sorted_w = jnp.take_along_axis(topk_w, order, axis=1)
+
+    # per-row segment starts of each expert in the sorted order
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(
+        sorted_expert)                                        # (B,E)
+
+    # dispatch: slot (e,c) reads sorted position starts[e]+c if it belongs
+    slot_expert = (jnp.arange(E * C) // C)[None, :]           # (1,E*C)
+    slot_pos = (jnp.arange(E * C) % C)[None, :]
+    src = jnp.take_along_axis(starts, jnp.broadcast_to(
+        slot_expert, (B, E * C)), axis=1) + slot_pos          # (B,E*C)
+    src_c = jnp.clip(src, 0, SK - 1)
+    slot_valid = (src < SK) & (jnp.take_along_axis(
+        sorted_expert, src_c, axis=1) == slot_expert)
+    tok_for_slot = jnp.take_along_axis(sorted_token, src_c, axis=1)
+    xe = jnp.take_along_axis(x, tok_for_slot[..., None], axis=1)  # (B,E*C,d)
+    xe = jnp.where(slot_valid[..., None], xe, 0).reshape(B, E, C, d)
+    xe = shard_hint(xe, ("batch", "experts", None, None))
+
+    # expert compute: batch-sharded -> expert-sharded (the all-to-all)
+    xe_t = shard_hint(xe.transpose(1, 0, 2, 3).reshape(E, B * C, d),
+                      ("experts", None, None))
+    ye_t = _expert_ffn(params, xe_t)                          # (E,B*C,d)
+    ye = shard_hint(ye_t.reshape(E, B, C, d).transpose(1, 0, 2, 3),
+                    ("batch", "experts", None, None)).reshape(B, E * C, d)
+
+    # combine: each sorted pair j sits at slot expert_j*C + (j - start); read
+    # back by gather, un-sort by the inverse permutation (again a gather)
+    pos_in_seg = jnp.arange(SK)[None, :] - jnp.take_along_axis(
+        starts, sorted_expert, axis=1)                        # (B,SK)
+    keep = pos_in_seg < C
+    pair_slot = jnp.clip(sorted_expert * C + jnp.clip(pos_in_seg, 0, C - 1),
+                         0, E * C - 1)
+    contrib_sorted = jnp.take_along_axis(ye, pair_slot[..., None], axis=1)
+    contrib_sorted = jnp.where(keep[..., None], contrib_sorted, 0) \
+        * sorted_w[..., None].astype(ye.dtype)
+    inv_order = jnp.argsort(order, axis=1)
+    contrib = jnp.take_along_axis(contrib_sorted, inv_order[..., None],
+                                  axis=1)                     # pair order
+    out = contrib.reshape(B, S, K, d).sum(axis=2).astype(x.dtype)
+    out = shard_hint(out, ("batch", "seq", "embed"))
+
+    if cfg.n_shared_experts:
+        dt = x.dtype
+        h = (jax.nn.silu(x @ params["shared_gate"].astype(dt))
+             * (x @ params["shared_up"].astype(dt)))
+        out = out + h @ params["shared_down"].astype(dt)
+    return shard_hint(out, ("batch", "seq", "embed")), aux
+
+
+def moe_apply_dense(params, cfg, x):
+    """Droppless O(E) reference: run every expert on every token (tests only)."""
+    B, S, d = x.shape
+    x_flat = x.reshape(-1, d)
+    probs, topk_idx, topk_w = _router(params, cfg, x_flat)
+    aux = router_aux_loss(probs, topk_idx, cfg.n_experts)
+    dt = x.dtype
+    h = (jax.nn.silu(jnp.einsum("td,edf->tef", x_flat, params["gate"].astype(dt)))
+         * jnp.einsum("td,edf->tef", x_flat, params["up"].astype(dt)))
+    y_all = jnp.einsum("tef,efd->ted", h, params["down"].astype(dt))  # (T,E,d)
+    gates = jnp.zeros((x_flat.shape[0], cfg.n_experts), jnp.float32)
+    gates = gates.at[jnp.arange(x_flat.shape[0])[:, None], topk_idx].set(topk_w)
+    out = jnp.einsum("te,ted->td", gates.astype(dt), y_all).reshape(B, S, d)
+    if cfg.n_shared_experts:
+        h = (jax.nn.silu(x @ params["shared_gate"].astype(dt))
+             * (x @ params["shared_up"].astype(dt)))
+        out = out + h @ params["shared_down"].astype(dt)
+    return out, aux

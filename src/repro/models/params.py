@@ -1,0 +1,117 @@
+"""Parameter specification system.
+
+Every model declares its parameters once, as a pytree of :class:`ParamSpec`
+(shape + logical axis names + initializer family).  From that single source of
+truth we derive:
+
+  * materialized parameters          (``init_params``)
+  * jax.ShapeDtypeStruct stand-ins   (``abstract_params``) for the dry-run
+  * PartitionSpecs for pjit          (``specs_to_pspecs`` via sharding rules)
+
+Logical axis names used across the zoo:
+  "embed"     : the residual/d_model dimension
+  "heads"     : query-head dimension (tensor-parallel)
+  "kv_heads"  : kv-head dimension (tensor-parallel when divisible)
+  "mlp"       : ffn hidden dimension (tensor-parallel)
+  "experts"   : MoE expert dimension (expert-parallel)
+  "vocab"     : vocabulary dimension (tensor-parallel)
+  "kv_lora"   : MLA compressed-kv dimension (replicated)
+  "ssm_inner" : mamba inner channel dimension (tensor-parallel)
+  "ssm_state" : SSM state dimension (replicated)
+  None        : never sharded
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple          # logical axis name (or None) per dim; len == len(shape)
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "scaled" | "ssm_a" | "ssm_dt"
+    dtype: Any = jnp.float32
+    fan_in_axes: tuple = ()  # dims (indices) treated as fan-in for "scaled" init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(spec: ParamSpec) -> int:
+    if spec.fan_in_axes:
+        return int(np.prod([spec.shape[i] for i in spec.fan_in_axes]))
+    # default: all dims but the last are fan-in for >=2D, else size
+    if len(spec.shape) >= 2:
+        return int(np.prod(spec.shape[:-1]))
+    return max(1, spec.shape[0] if spec.shape else 1)
+
+
+def init_leaf(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "ssm_a":
+        # A_log init: log of uniform [1, 16] (mamba2 convention)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(spec.dtype)
+    if spec.init == "ssm_dt":
+        # dt bias: inverse-softplus of uniform [1e-3, 1e-1]
+        dt = jnp.exp(
+            jax.random.uniform(key, spec.shape, jnp.float32)
+            * (math.log(1e-1) - math.log(1e-3))
+            + math.log(1e-3)
+        )
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(spec.dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * 0.02).astype(spec.dtype)
+    if spec.init == "scaled":
+        std = 1.0 / math.sqrt(_fan_in(spec))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], specs):
+    return jax.tree_util.tree_map(fn, specs, is_leaf=is_spec)
+
+
+def init_params(key: jax.Array, specs) -> Any:
+    """Materialize a pytree of ParamSpec into real arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs) -> Any:
+    """ShapeDtypeStruct stand-ins — no allocation (for the dry-run)."""
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def stack_specs(spec_tree, n: int, axis_name=None):
+    """Prepend a stacking dim of size ``n`` to every spec (scan-over-layers)."""
+    return tree_map_specs(
+        lambda s: ParamSpec(
+            (n,) + s.shape,
+            (axis_name,) + s.axes,
+            s.init,
+            s.dtype,
+            tuple(i + 1 for i in s.fan_in_axes),
+        ),
+        spec_tree,
+    )
+
+
+def param_count(specs) -> int:
+    leaves, _ = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))

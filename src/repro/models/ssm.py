@@ -1,0 +1,257 @@
+"""Mamba2 — SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Train/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear across chunks); decode is the O(1) recurrent update.  The SSM cache is
+{"conv": (B,W-1,convdim), "state": (B,H,P,N), "pos": (B,) int32} — constant
+size in sequence length, which is what makes long_500k decode run natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models.layers import rmsnorm_specs
+from repro.models.params import ParamSpec
+
+
+def _dims(cfg):
+    d_in = cfg.d_inner
+    H = cfg.ssm_n_heads
+    P = cfg.ssm_head_dim
+    G = cfg.ssm_n_groups
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * G * N
+    return d_in, H, P, G, N, conv_dim
+
+
+def mamba_specs(cfg) -> dict:
+    d = cfg.d_model
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    d_proj = 2 * d_in + 2 * G * N + H          # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((d, d_proj), ("embed_p", "ssm_inner"), init="scaled"),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, conv_dim), (None, "ssm_inner"),
+                            init="scaled", fan_in_axes=(0,)),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((H,), (None,), init="ssm_a"),
+        "D": ParamSpec((H,), (None,), init="ones"),
+        "dt_bias": ParamSpec((H,), (None,), init="ssm_dt"),
+        "norm": rmsnorm_specs(d_in)["scale"],
+        "out_proj": ParamSpec((d_in, d), ("ssm_inner", "embed_p"), init="scaled"),
+    }
+
+
+def init_ssm_cache(cfg, batch: int) -> dict:
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    dt = cfg.activation_dtype
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dt),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _segsum_decay(cum: jax.Array) -> jax.Array:
+    """cum (..., Q, H) within-chunk cumulative log-decay -> (..., H, Q, Q)
+    lower-triangular exp(cum_i - cum_j) for i >= j."""
+    Q = cum.shape[-2]
+    diff = cum[..., :, None, :] - cum[..., None, :, :]      # (..., Qi, Qj, H)
+    diff = jnp.moveaxis(diff, -1, -3)                       # (..., H, Qi, Qj)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A_log, Bm, Cm, chunk: int, init_state=None, D=None,
+                unroll: bool = False, accum_dtype=jnp.float32):
+    """Chunked SSD scan.
+
+    x  (B,S,H,P)   inputs (pre-dt-scaling)
+    dt (B,S,H)     post-softplus timesteps
+    Bm, Cm (B,S,G,N)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    Computation in f32 for stability.
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    NC, Q = Sp // chunk, chunk
+
+    f32 = jnp.float32
+    adt = jnp.dtype(accum_dtype)   # big-intermediate dtype (bandwidth lever)
+    x_ = x.reshape(Bsz, NC, Q, H, P).astype(adt)
+    dt_ = dt.reshape(Bsz, NC, Q, H).astype(f32)
+    Bh = jnp.repeat(Bm.reshape(Bsz, NC, Q, G, N), rep, axis=3).astype(adt)
+    Ch = jnp.repeat(Cm.reshape(Bsz, NC, Q, G, N), rep, axis=3).astype(adt)
+
+    A = -jnp.exp(A_log.astype(f32))                          # (H,)
+    dA = dt_ * A                                             # (B,NC,Q,H) log decay
+    xd = x_ * dt_[..., None].astype(adt)                     # dt-scaled inputs
+    cum = jnp.cumsum(dA, axis=2)                             # (B,NC,Q,H) f32
+
+    # ---- intra-chunk (diagonal blocks)
+    CB = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh,
+                    preferred_element_type=f32)              # (B,NC,H,Q,Q)
+    L = _segsum_decay(cum)                                   # (B,NC,H,Q,Q) f32
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", (CB * L).astype(adt), xd,
+                        preferred_element_type=f32)
+
+    # ---- per-chunk states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,NC,Q,H)
+    S_c = jnp.einsum("bcqhn,bcqhp->bchpn",
+                     Bh * decay_to_end[..., None].astype(adt), xd,
+                     preferred_element_type=f32)
+
+    # ---- inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,NC,H)
+    h0 = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(h, inp):
+        cd, sc = inp                                         # (B,H), (B,H,P,N)
+        h_new = h * cd[..., None, None] + sc
+        return h_new, h                                      # emit state *before* chunk
+
+    if unroll and NC <= 64:
+        # NC cap: beyond it we keep lax.scan even in unroll mode — the loop
+        # body is only the (B,H,P,N) state update, whose cost_analysis
+        # undercount is <1% of layer flops (EXPERIMENTS.md §Roofline note);
+        # unrolling 512 chunks would explode aux-compile time instead.
+        h, prevs = h0, []
+        for c in range(NC):
+            h, prev = step(h, (chunk_decay[:, c], S_c[:, c]))
+            prevs.append(prev)
+        h_final = h
+        h_prevs = jnp.stack(prevs, axis=1)                   # (B,NC,H,P,N)
+    else:
+        h_final, h_prevs = jax.lax.scan(
+            step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_c, 1, 0)))
+        h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B,NC,H,P,N)
+
+    # ---- inter-chunk contribution
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp",
+                       Ch * jnp.exp(cum)[..., None].astype(adt),
+                       h_prevs.astype(adt), preferred_element_type=f32)
+
+    y = (y_diag + y_off).reshape(Bsz, Sp, H, P)[:, :S]
+    if D is not None:
+        y = y + x[:, :S].astype(f32) * D.astype(f32)[None, None, :, None]
+    return y, h_final
+
+
+def ssd_decode_step(state, x, dt, A_log, Bm, Cm, D=None):
+    """O(1) recurrence. x (B,H,P), dt (B,H), Bm/Cm (B,G,N), state (B,H,P,N)."""
+    f32 = jnp.float32
+    H = x.shape[1]
+    rep = H // Bm.shape[1]
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(f32)             # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(f32)
+    A = -jnp.exp(A_log.astype(f32))
+    dA = jnp.exp(dt.astype(f32) * A)                         # (B,H)
+    xd = x.astype(f32) * dt.astype(f32)[..., None]           # (B,H,P)
+    state = state * dA[..., None, None] + xd[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    if D is not None:
+        y = y + x.astype(f32) * D.astype(f32)[None, :, None]
+    return y, state
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv. xBC (B,S,C), w (W,C), b (C,)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def mamba_apply(params, cfg, x, cache=None, use_kernel: bool = False,
+                kv_valid=None):
+    """Mamba2 block. x (B,S,d) -> (out (B,S,d), new_cache).
+
+    ``kv_valid`` (B,S) bool marks right-pad positions in ragged rollout
+    batches: their dt is zeroed (state unchanged) and the conv history is
+    gathered from the last *valid* inputs per row.
+    """
+    B, S, d = x.shape
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    dt_ = x.dtype
+
+    proj = x @ params["in_proj"].astype(dt_)                 # (B,S,d_proj)
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:d_in + conv_dim]
+    dt_raw = proj[..., d_in + conv_dim:]                     # (B,S,H)
+
+    new_cache = None
+    if cache is not None:
+        # prepend conv history, keep new history
+        hist = cache["conv"].astype(dt_)
+        xBC_ext = jnp.concatenate([hist, xBC], axis=1)
+        W = cfg.ssm_conv_width
+        conv = sum(xBC_ext[:, i:i + S, :] * params["conv_w"].astype(dt_)[i][None, None]
+                   for i in range(W))
+        xBC_act = jax.nn.silu(conv + params["conv_b"].astype(dt_)[None, None])
+        if W > 1:
+            if kv_valid is None:
+                new_hist = xBC_ext[:, -(W - 1):, :]
+            else:
+                # last W-1 *valid* ext rows per batch row; ext row index of the
+                # last valid token is (W-1) + len_r - 1
+                lens = jnp.sum(kv_valid.astype(jnp.int32), axis=1)     # (B,)
+                idx = lens[:, None] + jnp.arange(W - 1)[None, :]       # (B,W-1)
+                idx = jnp.clip(idx, 0, xBC_ext.shape[1] - 1)
+                new_hist = jnp.take_along_axis(xBC_ext, idx[:, :, None], axis=1)
+        else:
+            new_hist = hist
+    else:
+        xBC_act = _causal_conv(xBC, params["conv_w"].astype(dt_),
+                               params["conv_b"].astype(dt_))
+        new_hist = None
+
+    x_ssm = xBC_act[..., :d_in].reshape(B, S, H, P)
+    Bm = xBC_act[..., d_in:d_in + G * N].reshape(B, S, G, N)
+    Cm = xBC_act[..., d_in + G * N:].reshape(B, S, G, N)
+    dt_post = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                              + params["dt_bias"].astype(jnp.float32))
+    if kv_valid is not None:
+        # zero dt at pad positions: exp(0)=1 decay, zero input -> state frozen
+        dt_post = dt_post * kv_valid.astype(jnp.float32)[..., None]
+
+    init_state = cache["state"] if cache is not None else None
+    if cache is not None and S == 1:
+        y, state = ssd_decode_step(
+            init_state, x_ssm[:, 0], dt_post[:, 0], params["A_log"],
+            Bm[:, 0], Cm[:, 0], D=params["D"])
+        y = y[:, None]
+    elif use_kernel and cache is None:
+        from repro.kernels.ops import ssd_scan
+        y, state = ssd_scan(x_ssm, dt_post, params["A_log"], Bm, Cm,
+                            chunk=cfg.ssm_chunk, D=params["D"])
+    else:
+        y, state = ssd_chunked(x_ssm, dt_post, params["A_log"], Bm, Cm,
+                               chunk=cfg.ssm_chunk, init_state=init_state,
+                               D=params["D"], unroll=cfg.unroll_scans,
+                               accum_dtype=jnp.dtype(cfg.accum_dtype))
+
+    if cache is not None:
+        n_new = (jnp.full((B,), S, jnp.int32) if kv_valid is None
+                 else jnp.sum(kv_valid.astype(jnp.int32), axis=1))
+        new_cache = {"conv": new_hist.astype(cache["conv"].dtype),
+                     "state": state,
+                     "pos": cache["pos"] + n_new}
+
+    # gated RMSNorm then out-projection
+    y = y.reshape(B, S, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm"].astype(jnp.float32)
+    y = y.astype(dt_)
+    y = shard_hint(y, ("batch", "seq", "ssm_inner"))
+    out = y @ params["out_proj"].astype(dt_)
+    return shard_hint(out, ("batch", "seq", "embed")), new_cache

@@ -1,0 +1,195 @@
+"""Batched generation engine — the TPU-native vLLM analogue (DESIGN.md §2).
+
+A :class:`DecodeSession` holds one shared KV/SSM cache for a batch of ragged
+contexts.  Turn structure for multi-turn rollouts:
+
+    session = engine.start(contexts)            # prefill prompts
+    toks, lps = engine.generate(session, n, k)  # sample until stop/budget
+    engine.extend(session, obs_token_lists)     # prefill tool observations
+    ...                                          # next turn reuses the cache
+
+Ragged rows are right-padded per call; pads carry ``kv_valid=False`` so they
+are stored with pos=-1 (attention) / dt=0 (SSM) and never influence later
+tokens — rollout logprobs therefore match training-time logprobs exactly
+(tests/test_rollout.py asserts this).  Prefill lengths are bucketed to
+multiples of 32 to bound jit recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+BUCKET = 32
+
+
+def _bucket(n: int) -> int:
+    return max(BUCKET, ((n + BUCKET - 1) // BUCKET) * BUCKET)
+
+
+@dataclasses.dataclass
+class DecodeSession:
+    cache: object
+    lengths: np.ndarray            # (B,) real tokens currently in cache
+    last_logits: jnp.ndarray       # (B, V) logits at each row's last real token
+    stopped: np.ndarray            # (B,) bool
+    cross_kv: object = None        # enc-dec only
+
+    @property
+    def batch(self) -> int:
+        return len(self.lengths)
+
+
+class GenerationEngine:
+    def __init__(self, model: Model, params, pad_id: int, stop_ids: Sequence[int],
+                 max_len: int = 1024, temperature: float = 1.0,
+                 window: int = 0):
+        self.model = model
+        self.params = params
+        self.pad_id = pad_id
+        self.stop_ids = tuple(stop_ids)
+        self.max_len = max_len
+        self.temperature = temperature
+        self.window = window
+        self._prefill_jit = jax.jit(self._prefill_impl)
+        self._decode_jit = jax.jit(self._decode_impl)
+
+    # ------------------------------------------------------------- impl fns
+    def _prefill_impl(self, params, cache, tokens, positions, valid, cross_kv):
+        kw = {"cross_kv": cross_kv} if self.model.cfg.family == "encdec" else {}
+        logits, new_cache = self.model.decode_step(
+            params, tokens, positions, cache, window=self.window,
+            kv_valid=valid, **kw)
+        return logits, new_cache
+
+    def _decode_impl(self, params, cache, tokens, positions, valid, key,
+                     temperature, cross_kv):
+        kw = {"cross_kv": cross_kv} if self.model.cfg.family == "encdec" else {}
+        logits, new_cache = self.model.decode_step(
+            params, tokens, positions, cache, window=self.window,
+            kv_valid=valid[:, None], **kw)
+        logits = logits[:, 0, :]                       # (B,V)
+        return None, None, logits, new_cache
+
+    # ------------------------------------------------------------- session ops
+    def start(self, contexts: List[List[int]], prefix_embeds=None) -> DecodeSession:
+        B = len(contexts)
+        cross_kv = None
+        if self.model.cfg.family == "encdec":
+            from repro.models import transformer as T
+            enc = T.encdec_encode(self.params, self.model.cfg,
+                                  jnp.asarray(prefix_embeds))
+            cross_kv = T.encdec_cross_kv(self.params, self.model.cfg, enc)
+        cache = self.model.init_cache(B, self.max_len, self.window)
+        session = DecodeSession(
+            cache=cache,
+            lengths=np.zeros((B,), np.int64),
+            last_logits=jnp.zeros((B, self.model.cfg.vocab_size)),
+            stopped=np.zeros((B,), bool),
+            cross_kv=cross_kv,
+        )
+        self.extend(session, contexts)
+        return session
+
+    def extend(self, session: DecodeSession, new_tokens: List[List[int]]) -> None:
+        """Prefill ragged per-row token lists into the session cache."""
+        B = session.batch
+        lens = np.array([len(t) for t in new_tokens], np.int64)
+        if lens.max(initial=0) == 0:
+            return
+        if not self.window and (session.lengths + lens).max() > self.max_len:
+            raise ValueError(
+                f"context overflow: extend to {(session.lengths + lens).max()} "
+                f"tokens > engine max_len={self.max_len}; raise max_len or "
+                f"shorten prompts")
+        L = _bucket(int(lens.max()))
+        toks = np.full((B, L), self.pad_id, np.int32)
+        pos = np.zeros((B, L), np.int32)
+        valid = np.zeros((B, L), bool)
+        for i, t in enumerate(new_tokens):
+            toks[i, :len(t)] = t
+            valid[i, :len(t)] = True
+            pos[i] = session.lengths[i] + np.arange(L)
+        logits, session.cache = self._prefill_jit(
+            self.params, session.cache, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(valid), session.cross_kv)
+        # logits at each row's last *new* real token (rows w/o new tokens keep old)
+        idx = np.maximum(lens - 1, 0)
+        gathered = jnp.take_along_axis(
+            logits, jnp.asarray(idx)[:, None, None], axis=1)[:, 0, :]
+        has_new = jnp.asarray(lens > 0)[:, None]
+        session.last_logits = jnp.where(has_new, gathered, session.last_logits)
+        session.lengths = session.lengths + lens
+
+    def generate(self, session: DecodeSession, max_new_tokens: int,
+                 key: jax.Array, temperature: Optional[float] = None
+                 ) -> Tuple[List[List[int]], List[np.ndarray]]:
+        """Sample per-row continuations until a stop id / budget / max_len.
+
+        Returns (tokens, logprobs) per row — only tokens up to and including
+        the stop id are kept.  Rows already stopped generate nothing.
+        """
+        temp = self.temperature if temperature is None else temperature
+        B = session.batch
+        out_tokens: List[List[int]] = [[] for _ in range(B)]
+        out_logps: List[List[float]] = [[] for _ in range(B)]
+        active = ~session.stopped & (session.lengths < self.max_len - 1)
+
+        for _ in range(max_new_tokens):
+            if not active.any():
+                break
+            # sample the next token for every row from the current logits
+            key, sub = jax.random.split(key)
+            cur_tok, cur_lp = _sample(session.last_logits, sub, temp)
+            cur_tok, cur_lp = np.asarray(cur_tok), np.asarray(cur_lp)
+            accept = active.copy()
+            for i in range(B):
+                if accept[i]:
+                    t = int(cur_tok[i])
+                    out_tokens[i].append(t)
+                    out_logps[i].append(float(cur_lp[i]))
+                    if t in self.stop_ids:
+                        active[i] = False
+            # write accepted tokens into the cache; get logits for the next step
+            feed = np.where(accept, cur_tok, self.pad_id).astype(np.int32)
+            pos = session.lengths.astype(np.int32)
+            _, _, logits, session.cache = self._decode_jit(
+                self.params, session.cache, jnp.asarray(feed)[:, None],
+                jnp.asarray(pos)[:, None], jnp.asarray(accept), key,
+                jnp.float32(temp), session.cross_kv)
+            session.last_logits = jnp.where(jnp.asarray(accept)[:, None],
+                                            logits, session.last_logits)
+            session.lengths = session.lengths + accept.astype(np.int64)
+            active &= session.lengths < self.max_len - 1
+
+        return out_tokens, [np.array(l, np.float32) for l in out_logps]
+
+
+def _sample(logits: jnp.ndarray, key: jax.Array, temperature) -> tuple:
+    """Returns (token (B,), logprob-of-token (B,)) at the given temperature.
+
+    The recorded logprob is the *temperature-1 policy* logprob, which is what
+    the RL update needs (the behaviour distribution used for sampling may be
+    tempered, but pi_theta is defined at temperature 1... For faithfulness to
+    veRL/RLFactory we record logprobs of the sampling distribution itself).
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    greedy = jnp.argmax(logits, axis=-1)
+
+    def do_sample(_):
+        scaled = jax.nn.log_softmax(logits / jnp.maximum(temperature, 1e-6),
+                                    axis=-1)
+        tok = jax.random.categorical(key, scaled, axis=-1)
+        return tok
+
+    temperature = jnp.asarray(temperature, jnp.float32)
+    tok = jax.lax.cond(temperature > 1e-6, do_sample, lambda _: greedy,
+                       operand=None)
+    lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+    return tok, lp

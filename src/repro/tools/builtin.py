@@ -1,0 +1,129 @@
+"""Built-in tools: the three forms of the paper (program / model / agent).
+
+Program tools here are offline-safe: a corpus-backed search engine, a safe
+calculator, and a tiny sandboxed "code interpreter" (arithmetic expression
+evaluator).  ``latency_s`` simulates real-tool response times so the async
+engine's overlap behaviour (and the Table-1 throughput experiment) is
+measurable on CPU.
+"""
+from __future__ import annotations
+
+import ast
+import asyncio
+import operator
+import random
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.tools.registry import ToolRegistry, ToolSpec
+
+
+# ---------------------------------------------------------------- search corpus
+RELATIONS = ["capital", "color", "leader", "animal", "food"]
+_CONS = "bcdfghjklmnpqrstvwz"
+_VOW = "aeiou"
+
+
+def _word(rng: random.Random, syllables: int = 2) -> str:
+    return "".join(rng.choice(_CONS) + rng.choice(_VOW)
+                   for _ in range(syllables))
+
+
+class FactCorpus:
+    """Deterministic synthetic KB: facts '(relation) of (entity) is (value)'."""
+
+    def __init__(self, n_entities: int = 200, seed: int = 0):
+        rng = random.Random(seed)
+        self.entities = sorted({_word(rng, 3) for _ in range(n_entities)})
+        self.facts: Dict[Tuple[str, str], str] = {}
+        for e in self.entities:
+            for r in RELATIONS:
+                self.facts[(r, e)] = _word(rng, 2)
+        self.lines = [f"the {r} of {e} is {v}"
+                      for (r, e), v in sorted(self.facts.items())]
+
+    def lookup(self, relation: str, entity: str) -> Optional[str]:
+        return self.facts.get((relation, entity))
+
+    def search(self, query: str, top_k: int = 3) -> List[str]:
+        """Ranked substring/token match over fact lines."""
+        terms = [t for t in re.findall(r"[a-z]+", query.lower()) if t]
+        if not terms:
+            return []
+        scored = []
+        for line in self.lines:
+            score = sum(1 for t in terms if t in line)
+            if score:
+                scored.append((-score, line))
+        scored.sort()
+        return [line for _, line in scored[:top_k]]
+
+
+# ---------------------------------------------------------------- calculator
+_BIN_OPS = {ast.Add: operator.add, ast.Sub: operator.sub,
+            ast.Mult: operator.mul, ast.Div: operator.truediv,
+            ast.Pow: operator.pow, ast.Mod: operator.mod,
+            ast.FloorDiv: operator.floordiv}
+_UN_OPS = {ast.USub: operator.neg, ast.UAdd: operator.pos}
+
+
+def safe_eval(expr: str) -> float:
+    """Arithmetic-only expression evaluator (the 'code interpreter')."""
+    def ev(node):
+        if isinstance(node, ast.Expression):
+            return ev(node.body)
+        if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)):
+            return node.value
+        if isinstance(node, ast.BinOp) and type(node.op) in _BIN_OPS:
+            return _BIN_OPS[type(node.op)](ev(node.left), ev(node.right))
+        if isinstance(node, ast.UnaryOp) and type(node.op) in _UN_OPS:
+            return _UN_OPS[type(node.op)](ev(node.operand))
+        raise ValueError(f"disallowed expression node: {type(node).__name__}")
+    return ev(ast.parse(expr, mode="eval"))
+
+
+# ---------------------------------------------------------------- registration
+def make_builtin_registry(corpus: Optional[FactCorpus] = None,
+                          latency_s: float = 0.0,
+                          latency_jitter: float = 0.0,
+                          seed: int = 0) -> ToolRegistry:
+    """Registry with search / calculate / python tools.
+
+    ``latency_s`` (+ uniform jitter) simulates network/tool latency via
+    asyncio.sleep — the async engine overlaps these sleeps across the batch,
+    a sync executor serializes them (Table 1 experiment).
+    """
+    corpus = corpus or FactCorpus()
+    rng = random.Random(seed)
+    reg = ToolRegistry()
+
+    async def search(query: str) -> str:
+        if latency_s or latency_jitter:
+            await asyncio.sleep(latency_s + rng.uniform(0, latency_jitter))
+        hits = corpus.search(query)
+        return " | ".join(hits) if hits else "no results"
+
+    async def calculate(expression: str) -> str:
+        if latency_s or latency_jitter:
+            await asyncio.sleep(0.2 * (latency_s + rng.uniform(0, latency_jitter)))
+        return str(safe_eval(expression))
+
+    async def python(code: str) -> str:
+        # arithmetic-only sandbox; a stand-in for the paper's code interpreter
+        if latency_s or latency_jitter:
+            await asyncio.sleep(2.0 * (latency_s + rng.uniform(0, latency_jitter)))
+        return str(safe_eval(code))
+
+    reg.register(ToolSpec(
+        name="search", fn=search, kind="program",
+        description="search the knowledge base",
+        parameters={"query": {"type": "string", "required": True}}))
+    reg.register(ToolSpec(
+        name="calculate", fn=calculate, kind="program",
+        description="evaluate an arithmetic expression",
+        parameters={"expression": {"type": "string", "required": True}}))
+    reg.register(ToolSpec(
+        name="python", fn=python, kind="program",
+        description="run a (restricted) python expression",
+        parameters={"code": {"type": "string", "required": True}}))
+    return reg

@@ -1,0 +1,47 @@
+"""Env base class — the application-layer contract (paper §2.3.1).
+
+An Env owns a ToolRegistry + ToolManager, executes tool calls (``step``),
+and scores finished trajectories (``compute_score`` — rule-based Eq. 1,
+``verify_tool`` — Eq. 3).  Model-judge scoring (Eq. 2) is composed in via
+core/rewards.py so judge infrastructure stays in the foundation layer.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import List, Optional, Sequence
+
+from repro.tools.manager import ToolManager
+from repro.tools.registry import ToolCall, ToolRegistry, ToolResult
+
+
+class Env:
+    def __init__(self, registry: ToolRegistry, manager: ToolManager,
+                 max_tool_calls: int = 4):
+        self.registry = registry
+        self.manager = manager
+        self.max_tool_calls = max_tool_calls
+
+    # ------------------------------------------------------------ interaction
+    async def step(self, calls: List[ToolCall]) -> List[ToolResult]:
+        """Execute one turn's tool calls (asynchronously, in parallel)."""
+        return list(await asyncio.gather(
+            *(self.registry.call_async(c) for c in calls)))
+
+    # ------------------------------------------------------------ rewards
+    def compute_score(self, trajectory, ground_truth) -> dict:
+        """Rule-based reward (Eq. 1): return {"score": float, <component>: ...}.
+
+        Subclasses define weighted rule components: format validity, task
+        completion, efficiency, ...
+        """
+        raise NotImplementedError
+
+    def verify_tool(self, answer: str, ground_truth) -> Optional[ToolResult]:
+        """Tool-verification reward hook (Eq. 3): run the model's output
+        through a verifier tool; None if the env has no verifier."""
+        return None
+
+    # ------------------------------------------------------------ data
+    def sample_tasks(self, n: int, split: str = "train", seed: int = 0):
+        """Yield (question, ground_truth) pairs."""
+        raise NotImplementedError

@@ -1,0 +1,121 @@
+"""ToolManager — the component-layer parse/format logic (paper §2.3, Fig. 3).
+
+``Qwen3ToolManager`` implements the hermes-style protocol Qwen3 uses:
+
+    <tool_call>{"name": ..., "arguments": {...}}</tool_call>
+    <tool_response>...</tool_response>
+
+plus a compact positional form ``<tool_call>name: arg</tool_call>`` that tiny
+byte-level policies can actually learn.  Users adapt private protocols by
+subclassing :class:`ToolManager` (paper: "users can design their own tool
+managers").
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import List, Optional, Tuple
+
+from repro.tools.registry import ToolCall, ToolRegistry, ToolResult
+
+
+class ToolManager:
+    """Base: parse model responses into tool calls; format observations."""
+
+    def __init__(self, registry: ToolRegistry):
+        self.registry = registry
+
+    # -- prompt construction -------------------------------------------------
+    def get_prompt(self, question: str) -> str:
+        raise NotImplementedError
+
+    # -- response parsing ----------------------------------------------------
+    def parse_response(self, text: str) -> Tuple[List[ToolCall], Optional[str]]:
+        """Returns (tool_calls, final_answer).  Empty calls + None answer
+        means a malformed / bare response => interaction terminates (paper:
+        'if no tool invocation intention is identified ... terminated')."""
+        raise NotImplementedError
+
+    # -- observation formatting ----------------------------------------------
+    def format_observation(self, results: List[ToolResult]) -> str:
+        raise NotImplementedError
+
+    def compose_final_output(self, text: str) -> str:
+        return text
+
+
+class Qwen3ToolManager(ToolManager):
+    CALL_RE = re.compile(r"<tool_call>(.*?)</tool_call>", re.S)
+    ANSWER_RE = re.compile(r"<answer>(.*?)</answer>", re.S)
+
+    def __init__(self, registry: ToolRegistry, system_template: Optional[str] = None,
+                 compact: bool = False):
+        super().__init__(registry)
+        self.compact = compact
+        if system_template is not None:
+            self.system_template = system_template
+        elif compact:
+            # short protocol header for byte-level policies (e2e CPU training)
+            self.system_template = "tools:{tools}\n"
+        else:
+            self.system_template = (
+                "You may call tools. Available tools:\n{tools}\n"
+                "Call a tool with <tool_call>{{\"name\": ..., \"arguments\": "
+                "{{...}}}}</tool_call> or answer with <answer>...</answer>.\n")
+
+    def tool_descriptions(self) -> str:
+        if self.compact:
+            return ",".join(f"{n}" for n in self.registry.names())
+        lines = []
+        for name in self.registry.names():
+            spec = self.registry.get(name)
+            params = ", ".join(spec.parameters)
+            lines.append(f"- {name}({params}): {spec.description}")
+        return "\n".join(lines)
+
+    def get_prompt(self, question: str) -> str:
+        q = f"Q: {question}\n" if self.compact else f"Question: {question}\n"
+        return self.system_template.format(tools=self.tool_descriptions()) + q
+
+    def parse_response(self, text: str) -> Tuple[List[ToolCall], Optional[str]]:
+        calls: List[ToolCall] = []
+        for i, m in enumerate(self.CALL_RE.finditer(text)):
+            body = m.group(1).strip()
+            call = self._parse_call_body(body, i)
+            if call is not None:
+                calls.append(call)
+        ans = self.ANSWER_RE.search(text)
+        answer = ans.group(1).strip() if ans else None
+        return calls, answer
+
+    def _parse_call_body(self, body: str, call_id: int) -> Optional[ToolCall]:
+        # full hermes JSON form
+        try:
+            obj = json.loads(body)
+            name = obj.get("name")
+            if name in self.registry:
+                return ToolCall(name, obj.get("arguments", {}) or {}, call_id)
+        except (json.JSONDecodeError, AttributeError):
+            pass
+        # compact positional form: "name: argument text"
+        if ":" in body:
+            name, arg = body.split(":", 1)
+            name = name.strip()
+            if name in self.registry:
+                spec = self.registry.get(name)
+                if spec.parameters:
+                    first = next(iter(spec.parameters))
+                    return ToolCall(name, {first: arg.strip()}, call_id)
+                return ToolCall(name, {}, call_id)
+        return None
+
+    def format_observation(self, results: List[ToolResult]) -> str:
+        parts = [f"<tool_response>{r.content}</tool_response>" for r in results]
+        return "".join(parts)
+
+    def postprocess_output(self, text: str) -> str:
+        """Strip anything after the first final answer."""
+        m = self.ANSWER_RE.search(text)
+        if m:
+            return text[: m.end()]
+        return text

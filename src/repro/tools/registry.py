@@ -1,0 +1,148 @@
+"""MCP-style tool registry (paper §2.3.1, ``mcp_tools.pydata``).
+
+Tools are declared with metadata (name, description, JSON-schema-ish
+parameters, endpoint) and an implementation: a sync or async callable.  The
+three tool forms of the paper are all covered by this one abstraction:
+  * program tools — plain (async) python callables,
+  * model tools   — a callable that runs a Model through the serving engine,
+  * agent tools   — a callable that itself orchestrates other tools.
+Users add tools via ``registry.register(...)`` or a JSON config file
+(:func:`ToolRegistry.from_config`) — no framework code changes ("low-code"
+tool expansion).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import inspect
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class ToolSpec:
+    name: str
+    description: str = ""
+    parameters: dict = dataclasses.field(default_factory=dict)  # name -> {type, required, default}
+    fn: Optional[Callable] = None
+    endpoint: str = "local"          # "local" | url | model id (metadata only)
+    timeout_s: float = 10.0
+    kind: str = "program"            # "program" | "model" | "agent"
+
+    def validate_args(self, args: dict) -> dict:
+        out = {}
+        for pname, meta in self.parameters.items():
+            if pname in args:
+                out[pname] = args[pname]
+            elif meta.get("required", False):
+                raise ValueError(f"tool {self.name}: missing required arg {pname!r}")
+            elif "default" in meta:
+                out[pname] = meta["default"]
+        return out
+
+
+@dataclasses.dataclass
+class ToolCall:
+    name: str
+    arguments: dict
+    call_id: int = 0
+
+
+@dataclasses.dataclass
+class ToolResult:
+    name: str
+    content: str
+    ok: bool = True
+    latency_s: float = 0.0
+    call_id: int = 0
+
+
+class ToolRegistry:
+    def __init__(self):
+        self._tools: Dict[str, ToolSpec] = {}
+
+    def register(self, spec: ToolSpec) -> ToolSpec:
+        self._tools[spec.name] = spec
+        return spec
+
+    def register_fn(self, name: str, fn: Callable, description: str = "",
+                    parameters: Optional[dict] = None, **kw) -> ToolSpec:
+        return self.register(ToolSpec(name=name, fn=fn, description=description,
+                                      parameters=parameters or {}, **kw))
+
+    def get(self, name: str) -> ToolSpec:
+        if name not in self._tools:
+            raise KeyError(f"unknown tool {name!r}; known: {sorted(self._tools)}")
+        return self._tools[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._tools
+
+    def names(self) -> List[str]:
+        return sorted(self._tools)
+
+    # ------------------------------------------------------- config file I/O
+    @classmethod
+    def from_config(cls, path: str, fn_table: Dict[str, Callable]) -> "ToolRegistry":
+        """Load tool metadata from a JSON config (the mcp_tools.pydata analogue);
+        implementations are looked up in ``fn_table`` by name."""
+        reg = cls()
+        with open(path) as f:
+            entries = json.load(f)["tools"]
+        for e in entries:
+            reg.register(ToolSpec(
+                name=e["name"],
+                description=e.get("description", ""),
+                parameters=e.get("parameters", {}),
+                endpoint=e.get("endpoint", "local"),
+                timeout_s=e.get("timeout_s", 10.0),
+                kind=e.get("kind", "program"),
+                fn=fn_table[e["name"]],
+            ))
+        return reg
+
+    def to_config(self) -> dict:
+        return {"tools": [
+            {"name": t.name, "description": t.description,
+             "parameters": t.parameters, "endpoint": t.endpoint,
+             "timeout_s": t.timeout_s, "kind": t.kind}
+            for t in self._tools.values()]}
+
+    # ------------------------------------------------------- execution
+    async def call_async(self, call: ToolCall) -> ToolResult:
+        t0 = time.monotonic()
+        try:
+            spec = self.get(call.name)
+            args = spec.validate_args(call.arguments)
+            if inspect.iscoroutinefunction(spec.fn):
+                content = await asyncio.wait_for(spec.fn(**args), spec.timeout_s)
+            else:
+                loop = asyncio.get_running_loop()
+                content = await asyncio.wait_for(
+                    loop.run_in_executor(None, lambda: spec.fn(**args)),
+                    spec.timeout_s)
+            return ToolResult(call.name, str(content), ok=True,
+                              latency_s=time.monotonic() - t0,
+                              call_id=call.call_id)
+        except Exception as e:  # tool errors are observations, not crashes
+            return ToolResult(call.name, f"ERROR: {type(e).__name__}: {e}",
+                              ok=False, latency_s=time.monotonic() - t0,
+                              call_id=call.call_id)
+
+    def call_sync(self, call: ToolCall) -> ToolResult:
+        t0 = time.monotonic()
+        try:
+            spec = self.get(call.name)
+            args = spec.validate_args(call.arguments)
+            if inspect.iscoroutinefunction(spec.fn):
+                content = asyncio.run(spec.fn(**args))
+            else:
+                content = spec.fn(**args)
+            return ToolResult(call.name, str(content), ok=True,
+                              latency_s=time.monotonic() - t0,
+                              call_id=call.call_id)
+        except Exception as e:
+            return ToolResult(call.name, f"ERROR: {type(e).__name__}: {e}",
+                              ok=False, latency_s=time.monotonic() - t0,
+                              call_id=call.call_id)

@@ -1,0 +1,100 @@
+"""SearchEnv — the Search-R1-style application env (paper §3).
+
+Task: answer synthetic KB questions ("what is the capital of X?") that the
+policy cannot answer from parameters — it must call the ``search`` tool and
+copy the retrieved value into ``<answer>``.
+
+Rule-based reward = Eq. 1 weighted sum:
+  * exact_match      answer equals ground truth
+  * tool_format      made >= 1 well-formed tool call
+  * answer_format    emitted a well-formed <answer>
+  * efficiency       penalty per tool call beyond the first
+
+``verify_tool`` (Eq. 3) re-queries the KB with the model's answer to check
+support — an offline analogue of NL2SQL-style verification.
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Optional, Tuple
+
+from repro.tools.builtin import FactCorpus, RELATIONS, make_builtin_registry
+from repro.tools.envs import Env
+from repro.tools.manager import Qwen3ToolManager
+from repro.tools.registry import ToolResult
+
+
+DEFAULT_WEIGHTS = {
+    "exact_match": 0.5,
+    "answer_overlap": 0.2,   # char-level similarity: densifies the EM signal
+    "tool_format": 0.15,
+    "answer_format": 0.15,
+    "efficiency": -0.02,     # per extra tool call
+}
+
+
+class SearchEnv(Env):
+    def __init__(self, n_entities: int = 200, seed: int = 0,
+                 latency_s: float = 0.0, latency_jitter: float = 0.0,
+                 max_tool_calls: int = 3, weights: Optional[dict] = None,
+                 test_fraction: float = 0.2):
+        self.corpus = FactCorpus(n_entities=n_entities, seed=seed)
+        registry = make_builtin_registry(self.corpus, latency_s=latency_s,
+                                         latency_jitter=latency_jitter, seed=seed)
+        manager = Qwen3ToolManager(registry, compact=True)
+        super().__init__(registry, manager, max_tool_calls=max_tool_calls)
+        self.weights = dict(DEFAULT_WEIGHTS)
+        if weights:
+            self.weights.update(weights)
+        rng = random.Random(seed + 1)
+        ents = list(self.corpus.entities)
+        rng.shuffle(ents)
+        n_test = max(1, int(len(ents) * test_fraction))
+        self.test_entities = set(ents[:n_test])
+        self.train_entities = [e for e in ents if e not in self.test_entities]
+
+    # ------------------------------------------------------------ tasks
+    def sample_tasks(self, n: int, split: str = "train", seed: int = 0
+                     ) -> List[Tuple[str, str]]:
+        rng = random.Random(seed)
+        pool = (self.train_entities if split == "train"
+                else sorted(self.test_entities))
+        tasks = []
+        for _ in range(n):
+            e = rng.choice(pool)
+            r = rng.choice(RELATIONS)
+            tasks.append((f"what is the {r} of {e}?",
+                          self.corpus.lookup(r, e)))
+        return tasks
+
+    # ------------------------------------------------------------ reward (Eq. 1)
+    def compute_score(self, trajectory, ground_truth) -> dict:
+        from repro.data.tokenizer import default_tokenizer
+        tok = default_tokenizer()
+        text = tok.decode(trajectory.model_tokens())
+        _, answer = self.manager.parse_response(text)
+        made_call = trajectory.n_tool_calls > 0
+        em = (answer is not None and ground_truth is not None
+              and answer.strip().lower() == str(ground_truth).strip().lower())
+        overlap = 0.0
+        if answer is not None and ground_truth is not None:
+            import difflib
+            overlap = difflib.SequenceMatcher(
+                None, answer.strip().lower(),
+                str(ground_truth).strip().lower()).ratio()
+        extra_calls = max(0, trajectory.n_tool_calls - 1)
+        comp = {
+            "exact_match": 1.0 if em else 0.0,
+            "answer_overlap": overlap,
+            "tool_format": 1.0 if made_call else 0.0,
+            "answer_format": 1.0 if answer is not None else 0.0,
+            "efficiency": float(extra_calls),
+        }
+        score = sum(self.weights[k] * v for k, v in comp.items())
+        return {"score": float(score), **comp, "answer": answer}
+
+    # ------------------------------------------------------------ verify (Eq. 3)
+    def verify_tool(self, answer: str, ground_truth) -> ToolResult:
+        hits = self.corpus.search(str(answer)) if answer else []
+        supported = any(str(ground_truth) in h for h in hits)
+        return ToolResult("verify_search", str(supported), ok=True)

@@ -1,0 +1,1 @@
+"""WebUI: stdlib training/dry-run dashboard (paper module 3)."""

@@ -1,0 +1,147 @@
+"""WebUI (paper §2.1: "WebUI provides a streamlined and user-friendly
+interactive graphical interface") — a zero-dependency stdlib dashboard.
+
+Serves:
+  /            training dashboard: reward/loss curves from
+               results/train/*.jsonl (auto-refresh)
+  /dryrun      dry-run artifact table from results/dryrun/*.json
+  /api/runs    raw JSON for the curves
+  /api/dryrun  raw JSON for the artifact table
+
+    PYTHONPATH=src python -m repro.webui.server [--port 8080]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+RESULTS = os.path.join(os.getcwd(), "results")
+
+PAGE = """<!doctype html><html><head><title>RLFactory-JAX</title>
+<style>
+ body {{ font-family: monospace; margin: 2em; background: #111; color: #ddd; }}
+ h1 {{ color: #7ec8ff; }} a {{ color: #7ec8ff; }}
+ table {{ border-collapse: collapse; }}
+ td, th {{ border: 1px solid #444; padding: 4px 8px; font-size: 13px; }}
+ .bar {{ background: #2a6; height: 12px; display: inline-block; }}
+</style></head>
+<body><h1>RLFactory-JAX {title}</h1>
+<p><a href="/">training</a> | <a href="/dryrun">dry-run</a></p>
+{body}
+<script>setTimeout(() => location.reload(), 10000);</script>
+</body></html>"""
+
+
+def load_runs():
+    runs = {}
+    for path in sorted(glob.glob(os.path.join(RESULTS, "train", "*.jsonl"))):
+        rows = []
+        with open(path) as f:
+            for line in f:
+                try:
+                    rows.append(json.loads(line))
+                except json.JSONDecodeError:
+                    pass
+        runs[os.path.basename(path)] = rows
+    return runs
+
+
+def load_dryrun():
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "dryrun", "*.json"))):
+        try:
+            with open(path) as f:
+                out.append(json.load(f))
+        except json.JSONDecodeError:
+            pass
+    return out
+
+
+def _ascii_curve(vals, width=60, height=8):
+    if not vals:
+        return "(no data)"
+    lo, hi = min(vals), max(vals)
+    rng = (hi - lo) or 1.0
+    cols = vals[-width:]
+    rows = []
+    for r in range(height, 0, -1):
+        thr = lo + rng * (r - 0.5) / height
+        rows.append("".join("█" if v >= thr else " " for v in cols))
+    return "\n".join(rows) + f"\n min={lo:.3f} max={hi:.3f} n={len(vals)}"
+
+
+def training_page():
+    parts = []
+    for name, rows in load_runs().items():
+        if not rows:
+            continue
+        rewards = [r.get("reward_mean", 0.0) for r in rows]
+        last = rows[-1]
+        parts.append(f"<h3>{name}</h3><pre>{_ascii_curve(rewards)}</pre>")
+        keys = ("step", "reward_mean", "exact_match", "finished_frac",
+                "tool_calls_mean", "loss", "rollout_s", "train_s")
+        parts.append("<table><tr>" + "".join(f"<th>{k}</th>" for k in keys)
+                     + "</tr><tr>"
+                     + "".join(f"<td>{round(last.get(k, 0), 4)}</td>"
+                               for k in keys) + "</tr></table>")
+    return PAGE.format(title="training", body="".join(parts) or "<p>no runs</p>")
+
+
+def dryrun_page():
+    rows = load_dryrun()
+    cells = ["<table><tr><th>arch</th><th>shape</th><th>mesh</th>"
+             "<th>variant</th><th>status</th><th>HBM/chip</th>"
+             "<th>dominant</th><th>t_dom</th></tr>"]
+    for d in rows:
+        r = d.get("roofline", {})
+        dom = r.get("dominant", "-")
+        t = r.get(f"t_{dom}_s", 0) if dom != "-" else 0
+        hbm = d.get("hbm_gb_per_chip", 0)
+        color = "#2a6" if (d["status"] == "ok" and hbm <= 16) else (
+            "#a62" if d["status"] == "ok" else "#666")
+        cells.append(
+            f"<tr><td>{d['arch']}</td><td>{d['shape']}</td>"
+            f"<td>{d.get('mesh','')}</td><td>{d.get('variant','')}</td>"
+            f"<td style='background:{color}'>{d['status']}</td>"
+            f"<td>{hbm:.1f} GB</td><td>{dom}</td><td>{t:.4g} s</td></tr>")
+    cells.append("</table>")
+    return PAGE.format(title="dry-run", body="".join(cells))
+
+
+class Handler(BaseHTTPRequestHandler):
+    def _send(self, body: str, ctype="text/html"):
+        data = body.encode()
+        self.send_response(200)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def do_GET(self):
+        if self.path.startswith("/api/runs"):
+            self._send(json.dumps(load_runs()), "application/json")
+        elif self.path.startswith("/api/dryrun"):
+            self._send(json.dumps(load_dryrun()), "application/json")
+        elif self.path.startswith("/dryrun"):
+            self._send(dryrun_page())
+        else:
+            self._send(training_page())
+
+    def log_message(self, *a):  # quiet
+        pass
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--port", type=int, default=8080)
+    args = ap.parse_args()
+    srv = ThreadingHTTPServer(("0.0.0.0", args.port), Handler)
+    print(f"RLFactory-JAX WebUI on http://localhost:{args.port}")
+    srv.serve_forever()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+# NOTE: no XLA_FLAGS / device-count overrides here — smoke tests and benches
+# must see the real single CPU device.  Only launch/dryrun.py forces 512
+# placeholder devices (in its own process).
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,74 @@
+"""Observation-token MDP tests (paper §2.2): segment typing, loss masks,
+batch packing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mdp import Role, Segment, Trajectory, to_training_batch
+
+
+def _traj(prompt, model1, obs, model2):
+    t = Trajectory()
+    t.append(Role.PROMPT, prompt)
+    t.append(Role.MODEL, model1)
+    t.append(Role.OBSERVATION, obs)
+    t.append(Role.MODEL, model2)
+    return t
+
+
+def test_segments_and_masks():
+    t = _traj([1, 2, 3], [4, 5], [6, 7, 8], [9])
+    assert t.tokens() == [1, 2, 3, 4, 5, 6, 7, 8, 9]
+    assert t.loss_mask() == [0, 0, 0, 1, 1, 0, 0, 0, 1]
+    assert t.observation_tokens() == [6, 7, 8]
+    assert t.model_tokens() == [4, 5, 9]
+    assert len(t) == 9
+
+
+def test_append_merges_same_role():
+    t = Trajectory()
+    t.append(Role.MODEL, [1])
+    t.append(Role.MODEL, [2, 3])
+    assert len(t.segments) == 1
+    assert t.segments[0].tokens == [1, 2, 3]
+
+
+def test_to_training_batch_padding():
+    t1 = _traj([1], [2], [3], [4])     # len 4
+    t2 = _traj([1, 1], [2, 2], [3, 3], [4, 4])  # len 8
+    t1.reward, t2.reward = 0.5, 1.0
+    batch = to_training_batch([t1, t2], max_len=16, pad_id=0)
+    assert batch["tokens"].shape == (2, 8)
+    assert batch["lengths"].tolist() == [4, 8]
+    assert batch["loss_mask"][0, 4:].sum() == 0       # pads masked out
+    np.testing.assert_allclose(batch["rewards"], [0.5, 1.0])
+
+
+def test_to_training_batch_truncation():
+    t = _traj(list(range(10)), [1] * 10, [2] * 10, [3] * 10)
+    batch = to_training_batch([t], max_len=16, pad_id=0)
+    assert batch["tokens"].shape == (1, 16)
+    assert batch["lengths"][0] == 16
+
+
+@given(st.lists(st.sampled_from([Role.PROMPT, Role.MODEL, Role.OBSERVATION]),
+                min_size=1, max_size=12),
+       st.data())
+@settings(max_examples=50, deadline=None)
+def test_mask_matches_roles_property(roles, data):
+    """Property: loss_mask[i] == 1 iff token i came from a MODEL segment."""
+    t = Trajectory()
+    expected = []
+    for r in roles:
+        n = data.draw(st.integers(min_value=1, max_value=5))
+        t.append(r, list(range(n)))
+        expected.extend([1 if r == Role.MODEL else 0] * n)
+    assert t.loss_mask() == expected
+    assert len(t.tokens()) == len(expected)
+
+
+def test_old_logprobs_alignment():
+    t = _traj([1, 2], [3], [4, 5], [6])
+    lp = np.array([0, 0, -1.5, 0, 0, -2.5], np.float32)
+    batch = to_training_batch([t], max_len=8, pad_id=0, old_logprobs=[lp])
+    np.testing.assert_allclose(batch["old_logprobs"][0], lp)

@@ -1,0 +1,156 @@
+"""Substrate tests: tokenizer (hypothesis roundtrip), AdamW, schedules,
+checkpointing, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.tokenizer import SPECIAL_TOKENS, ByteTokenizer
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, lr_at)
+
+
+# ------------------------------------------------------------- tokenizer
+def test_tokenizer_specials():
+    tok = ByteTokenizer(4096)
+    ids = tok.encode("<tool_call>search: x</tool_call>")
+    assert ids[0] == tok.special["<tool_call>"]
+    assert ids[-1] == tok.special["</tool_call>"]
+    assert tok.decode(ids) == "<tool_call>search: x</tool_call>"
+
+
+@given(st.text(alphabet=st.characters(codec="utf-8"), max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_tokenizer_roundtrip_property(text):
+    tok = ByteTokenizer(4096)
+    assert tok.decode(tok.encode(text)) == text
+
+
+def test_tokenizer_specials_embedded_in_text():
+    tok = ByteTokenizer(4096)
+    t = "abc<answer>42</answer>def<eos>"
+    ids = tok.encode(t)
+    assert tok.decode(ids) == t
+
+
+def test_tokenizer_bos_eos_pad():
+    tok = ByteTokenizer(4096)
+    ids = tok.encode("hi", add_bos=True, add_eos=True)
+    assert ids[0] == tok.bos_id and ids[-1] == tok.eos_id
+    assert tok.decode(ids + [tok.pad_id] * 3) == "hi<eos>"
+
+
+# ------------------------------------------------------------- optimizer
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.1, clip_norm=0)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        params, state, m = adamw_update(cfg, grads, state, params)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks():
+    cfg = AdamWConfig(lr=0.01, weight_decay=0.1, clip_norm=0)
+    params = {"x": jnp.array([1.0])}
+    state = adamw_init(params)
+    for _ in range(50):
+        params, state, _ = adamw_update(cfg, {"x": jnp.zeros(1)}, state, params)
+    assert float(params["x"][0]) < 1.0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    total = jnp.sqrt(clipped["a"] ** 2 + clipped["b"] ** 2)
+    assert float(total[0]) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_lr_schedules():
+    cfg = AdamWConfig(lr=1.0, schedule="cosine", warmup_steps=10,
+                      total_steps=110, min_lr_frac=0.1)
+    assert float(lr_at(cfg, 0)) < 0.2
+    assert float(lr_at(cfg, 9)) == pytest.approx(1.0)
+    assert float(lr_at(cfg, 109)) == pytest.approx(0.1, abs=1e-2)
+    const = AdamWConfig(lr=0.5, schedule="constant")
+    assert float(lr_at(const, 1000)) == pytest.approx(0.5)
+
+
+def test_adamw_bf16_params_stay_bf16():
+    cfg = AdamWConfig(lr=0.01)
+    params = {"x": jnp.ones((4,), jnp.bfloat16)}
+    state = adamw_init(params)
+    params, state, _ = adamw_update(cfg, {"x": jnp.ones((4,), jnp.float32)},
+                                    state, params)
+    assert params["x"].dtype == jnp.bfloat16
+    assert state["m"]["x"].dtype == jnp.float32
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.checkpointer import load_checkpoint, save_checkpoint
+    from repro.configs import get_config
+    from repro.models import Model
+    model = Model(get_config("tiny"))
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    path = str(tmp_path / "test.ckpt")
+    save_checkpoint(path, params, opt, step=7, metadata={"note": "hi"})
+    p2, o2, step, meta = load_checkpoint(path, params, opt)
+    assert step == 7 and meta["note"] == "hi"
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(opt),
+                    jax.tree_util.tree_leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- sharding rules
+def test_sharding_rules_divisibility_fallback():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import ShardingRules
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    rules = ShardingRules.__new__(ShardingRules)
+    rules.mesh = FakeMesh()
+    from repro.distributed.sharding import DEFAULT_RULES
+    rules.rules = dict(DEFAULT_RULES)
+    # divisible: shard
+    assert rules.pspec(("embed_p", "mlp"), (4096, 25600)) == P("data", "model")
+    # 28 heads on model=16, strict (pjit inputs): must replicate
+    assert rules.pspec(("heads", None), (28, 128), strict=True) == P()
+    # ...but activations (non-strict) shard unevenly (GSPMD pads)
+    assert rules.pspec(("heads", None), (28, 128), strict=False) == P("model")
+    # kv_heads=8 < 16: replicate either way
+    assert rules.pspec(("kv_heads", None), (8, 128), strict=False) == P()
+    # batch over (pod,data) but no pod axis in mesh -> data only
+    assert rules.pspec(("batch", "seq"), (256, 4096)) == P("data")
+    # a mesh axis used once only
+    assert rules.pspec(("mlp", "experts"), (64, 64)) == P("model")
+
+
+def test_param_specs_to_pspecs():
+    from repro.distributed.sharding import ShardingRules
+    from repro.models.params import ParamSpec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 4}
+
+    rules = ShardingRules.__new__(ShardingRules)
+    rules.mesh = FakeMesh()
+    from repro.distributed.sharding import DEFAULT_RULES
+    rules.rules = dict(DEFAULT_RULES)
+    specs = {"w": ParamSpec((64, 64), ("embed_p", "mlp"))}
+    pspecs = rules.specs_to_pspecs(specs)
+    from jax.sharding import PartitionSpec as P
+    assert pspecs["w"] == P("data", "model")

@@ -1,0 +1,111 @@
+"""Tool registry / manager / builtin tools (paper §2.3.1)."""
+import asyncio
+import json
+import os
+
+import pytest
+
+from repro.tools.builtin import FactCorpus, make_builtin_registry, safe_eval
+from repro.tools.manager import Qwen3ToolManager
+from repro.tools.registry import ToolCall, ToolRegistry, ToolSpec
+
+
+@pytest.fixture
+def registry():
+    return make_builtin_registry(FactCorpus(n_entities=20, seed=0))
+
+
+def test_registry_basic(registry):
+    assert "search" in registry
+    assert "calculate" in registry
+    assert "python" in registry
+    with pytest.raises(KeyError):
+        registry.get("nope")
+
+
+def test_config_roundtrip(tmp_path, registry):
+    cfg = registry.to_config()
+    path = tmp_path / "mcp_tools.json"
+    path.write_text(json.dumps(cfg))
+    fn_table = {name: registry.get(name).fn for name in registry.names()}
+    reg2 = ToolRegistry.from_config(str(path), fn_table)
+    assert reg2.names() == registry.names()
+    assert reg2.get("search").parameters == registry.get("search").parameters
+
+
+def test_call_sync_and_async(registry):
+    corpus = FactCorpus(n_entities=20, seed=0)
+    e = corpus.entities[0]
+    call = ToolCall("search", {"query": f"capital {e}"}, 0)
+    r = registry.call_sync(call)
+    assert r.ok and corpus.lookup("capital", e) in r.content
+    r2 = asyncio.run(registry.call_async(call))
+    assert r2.ok and r2.content == r.content
+
+
+def test_tool_error_is_captured_not_raised(registry):
+    r = registry.call_sync(ToolCall("calculate", {"expression": "1/0"}, 0))
+    assert not r.ok
+    assert "ERROR" in r.content
+
+
+def test_missing_required_arg(registry):
+    r = registry.call_sync(ToolCall("search", {}, 0))
+    assert not r.ok
+
+
+def test_safe_eval():
+    assert safe_eval("2 + 3 * 4") == 14
+    assert safe_eval("2 ** 10") == 1024
+    with pytest.raises(ValueError):
+        safe_eval("__import__('os')")
+
+
+def test_manager_parses_json_and_compact_forms(registry):
+    mgr = Qwen3ToolManager(registry)
+    calls, ans = mgr.parse_response(
+        '<tool_call>{"name": "search", "arguments": {"query": "x"}}</tool_call>')
+    assert calls[0].name == "search" and calls[0].arguments == {"query": "x"}
+    calls, _ = mgr.parse_response("<tool_call>search: capital foo</tool_call>")
+    assert calls[0].arguments == {"query": "capital foo"}
+    calls, ans = mgr.parse_response("<answer>42</answer>")
+    assert not calls and ans == "42"
+    # malformed -> no calls, no answer (interaction terminates)
+    calls, ans = mgr.parse_response("gibberish <tool_call>nope</tool_call>")
+    assert not calls and ans is None
+
+
+def test_manager_multiple_calls(registry):
+    mgr = Qwen3ToolManager(registry)
+    text = ("<tool_call>search: a</tool_call>"
+            "<tool_call>calculate: 1+1</tool_call>")
+    calls, _ = mgr.parse_response(text)
+    assert [c.name for c in calls] == ["search", "calculate"]
+    assert [c.call_id for c in calls] == [0, 1]
+
+
+def test_format_observation(registry):
+    from repro.tools.registry import ToolResult
+    mgr = Qwen3ToolManager(registry)
+    obs = mgr.format_observation([ToolResult("search", "hit1"),
+                                  ToolResult("calculate", "4")])
+    assert obs == ("<tool_response>hit1</tool_response>"
+                   "<tool_response>4</tool_response>")
+
+
+def test_model_and_agent_tool_kinds():
+    """The three tool forms: program, model, agent (paper §2.3.1)."""
+    reg = ToolRegistry()
+    reg.register(ToolSpec(name="summarize", kind="model",
+                          fn=lambda text: text[:8],
+                          parameters={"text": {"required": True}}))
+
+    def literature_agent(topic):
+        # an agent tool composes other tools
+        s = reg.call_sync(ToolCall("summarize", {"text": topic * 3}, 0))
+        return f"report({s.content})"
+
+    reg.register(ToolSpec(name="lit_agent", kind="agent", fn=literature_agent,
+                          parameters={"topic": {"required": True}}))
+    r = reg.call_sync(ToolCall("lit_agent", {"topic": "abc"}, 0))
+    assert r.ok and r.content == "report(abcabcab)"

@@ -1,0 +1,105 @@
+"""WebUI endpoints + layer-level unit tests vs naive references."""
+import json
+import threading
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+# ------------------------------------------------------------- layers
+def test_rmsnorm_matches_naive():
+    from repro.models.layers import rmsnorm
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 16))
+    scale = jax.random.normal(jax.random.PRNGKey(1), (16,)) + 1.0
+    out = rmsnorm({"scale": scale}, x, eps=1e-6)
+    ref = x / np.sqrt((np.asarray(x) ** 2).mean(-1, keepdims=True) + 1e-6) \
+        * np.asarray(scale)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+
+
+def test_rope_rotation_properties():
+    from repro.models.layers import apply_rope, rope_angles
+    # positions 0 => identity rotation
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 3, 2, 8))
+    pos0 = jnp.zeros((1, 3), jnp.int32)
+    cos, sin = rope_angles(pos0, 8, 1e4)
+    np.testing.assert_allclose(np.asarray(apply_rope(x, cos, sin)),
+                               np.asarray(x), atol=1e-6)
+    # rotation preserves norms
+    pos = jnp.arange(3, dtype=jnp.int32)[None]
+    cos, sin = rope_angles(pos, 8, 1e4)
+    out = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(out), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 8))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 8))
+
+    def dot_at(m, n):
+        cm, sm = rope_angles(jnp.array([[m]]), 8, 1e4)
+        cn, sn = rope_angles(jnp.array([[n]]), 8, 1e4)
+        return float(jnp.sum(apply_rope(q, cm, sm) * apply_rope(k, cn, sn)))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)
+
+
+def test_router_aux_loss_uniform_is_one():
+    """Perfectly balanced routing gives aux loss == 1 (E * E * (1/E)^2)."""
+    from repro.models.moe import router_aux_loss
+    E, T = 4, 64
+    probs = jnp.full((T, E), 1.0 / E)
+    topk = jnp.tile(jnp.arange(E), T // E)[:, None]   # round-robin, k=1
+    aux = router_aux_loss(probs, topk, E)
+    assert float(aux) == pytest.approx(1.0, rel=1e-5)
+    # fully collapsed routing is E times worse
+    probs_bad = jnp.zeros((T, E)).at[:, 0].set(1.0)
+    topk_bad = jnp.zeros((T, 1), jnp.int32)
+    assert float(router_aux_loss(probs_bad, topk_bad, E)) == pytest.approx(
+        float(E), rel=1e-5)
+
+
+def test_sft_expert_trajectories_are_correct():
+    from repro.core.sft import make_expert_trajectories
+    from repro.data.tokenizer import default_tokenizer
+    from repro.tools.search_env import SearchEnv
+    env = SearchEnv(n_entities=30, seed=0)
+    tok = default_tokenizer()
+    trajs = make_expert_trajectories(env, tok, n=4, seed=1)
+    for tr in trajs:
+        comp = env.compute_score(tr, tr.meta["ground_truth"])
+        assert comp["exact_match"] == 1.0, comp
+
+
+# ------------------------------------------------------------- webui
+@pytest.fixture(scope="module")
+def webui_port():
+    from repro.webui.server import Handler
+    from http.server import ThreadingHTTPServer
+    srv = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    yield srv.server_address[1]
+    srv.shutdown()
+
+
+def test_webui_pages(webui_port):
+    for path in ("/", "/dryrun"):
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{webui_port}{path}", timeout=10) as r:
+            body = r.read().decode()
+        assert "RLFactory-JAX" in body
+
+
+def test_webui_api(webui_port):
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{webui_port}/api/dryrun", timeout=10) as r:
+        data = json.loads(r.read())
+    assert isinstance(data, list)
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{webui_port}/api/runs", timeout=10) as r:
+        runs = json.loads(r.read())
+    assert isinstance(runs, dict)
