@@ -9,10 +9,52 @@ claim is measured against (benchmarks/bench_async_throughput.py).
 from __future__ import annotations
 
 import asyncio
+import threading
 import time
 from typing import List, Optional, Sequence
 
 from repro.tools.registry import ToolCall, ToolRegistry, ToolResult
+
+
+class _BackgroundLoop:
+    """A daemon thread running a persistent asyncio loop.
+
+    ``execute_batch`` must be callable from synchronous code that is itself
+    running *inside* an event loop (the webui/serving path drives rollouts
+    from async handlers); ``asyncio.run`` would raise "event loop already
+    running" there.  Coroutines are instead submitted to this loop and the
+    calling thread blocks on the future.
+    """
+
+    _lock = threading.Lock()
+    _shared: Optional["_BackgroundLoop"] = None
+
+    def __init__(self):
+        self.loop = asyncio.new_event_loop()
+        self.thread = threading.Thread(target=self.loop.run_forever,
+                                       name="tool-executor-loop", daemon=True)
+        self.thread.start()
+
+    @classmethod
+    def shared(cls) -> "_BackgroundLoop":
+        with cls._lock:
+            if cls._shared is None or not cls._shared.thread.is_alive():
+                cls._shared = cls()
+            return cls._shared
+
+    def run(self, coro):
+        try:
+            current = asyncio.get_running_loop()
+        except RuntimeError:
+            current = None
+        if current is self.loop:
+            # re-entered from our own thread (a tool calling execute_batch):
+            # blocking here would deadlock the loop — fail fast instead
+            coro.close()
+            raise RuntimeError(
+                "execute_batch called from the tool-executor loop itself; "
+                "await execute_batch_async instead")
+        return asyncio.run_coroutine_threadsafe(coro, self.loop).result()
 
 
 class AsyncToolExecutor:
@@ -48,7 +90,14 @@ class AsyncToolExecutor:
 
     def execute_batch(self, batch_calls: Sequence[List[ToolCall]]
                       ) -> List[List[ToolResult]]:
-        return asyncio.run(self.execute_batch_async(batch_calls))
+        try:
+            asyncio.get_running_loop()
+        except RuntimeError:
+            return asyncio.run(self.execute_batch_async(batch_calls))
+        # Called from inside a running loop (webui/serving path): hand the
+        # batch to the persistent background loop instead of asyncio.run.
+        return _BackgroundLoop.shared().run(
+            self.execute_batch_async(batch_calls))
 
     @property
     def overlap_factor(self) -> float:

@@ -71,19 +71,22 @@ class RolloutWorker:
         for turn in range(self.config.max_turns):
             # ---- Generate
             key, sub = jax.random.split(key)
-            new_toks, new_lps = self.engine.generate(
+            res = self.engine.generate(
                 session, self.config.max_new_tokens, sub,
                 temperature=self.config.temperature)
 
-            # ---- Parse
+            # ---- Parse (consume the batched (B, T) result row-wise)
             batch_calls = [[] for _ in trajs]
             any_call = False
             for i, tr in enumerate(trajs):
-                if not new_toks[i]:
+                n = int(res.counts[i])
+                if n == 0:
                     continue
-                tr.append(Role.MODEL, new_toks[i])
-                tr.meta["logprobs"].extend([float(x) for x in new_lps[i]])
-                text = self.tok.decode(new_toks[i])
+                row_toks = res.tokens[i, :n].tolist()
+                tr.append(Role.MODEL, row_toks)
+                tr.meta["logprobs"].extend(
+                    [float(x) for x in res.logprobs[i, :n]])
+                text = self.tok.decode(row_toks)
                 calls, answer = self.env.manager.parse_response(text)
                 over_budget = tr.n_tool_calls + len(calls) > self.env.max_tool_calls
                 if answer is not None or not calls or over_budget:

@@ -107,7 +107,15 @@ class Model:
 
     def decode_step(self, params, tokens, positions, caches, window: int = 0,
                     cross_kv=None, kv_valid=None):
-        """tokens (B,Q small), positions (B,Q) -> (logits, new_caches)."""
+        """tokens (B,Q small), positions (B,Q) -> (logits, new_caches).
+
+        Contract (the serving engine traces this inside a jitted
+        ``lax.while_loop``): pure function of its arguments, no host
+        callbacks, and ``new_caches`` must have exactly the same pytree
+        structure/shapes/dtypes as ``caches`` so it can be loop-carried.
+        Rows with ``kv_valid=False`` must leave the sequence state untouched
+        (attention stores pos=-1; SSM freezes the recurrent state via dt=0).
+        """
         c = self.cfg
         if c.family == "encdec":
             logits, _, nc = T.encdec_decode_stack(

@@ -4,21 +4,32 @@ A :class:`DecodeSession` holds one shared KV/SSM cache for a batch of ragged
 contexts.  Turn structure for multi-turn rollouts:
 
     session = engine.start(contexts)            # prefill prompts
-    toks, lps = engine.generate(session, n, k)  # sample until stop/budget
+    res = engine.generate(session, n, k)        # sample until stop/budget
     engine.extend(session, obs_token_lists)     # prefill tool observations
     ...                                          # next turn reuses the cache
 
 Ragged rows are right-padded per call; pads carry ``kv_valid=False`` so they
 are stored with pos=-1 (attention) / dt=0 (SSM) and never influence later
 tokens — rollout logprobs therefore match training-time logprobs exactly
-(tests/test_rollout.py asserts this).  Prefill lengths are bucketed to
-multiples of 32 to bound jit recompiles.
+(tests/test_rollout_and_rewards.py asserts this).
+
+The decode hot path is one fused, jitted ``lax.while_loop`` that runs
+entirely on device: per-step sampling, stop-id detection, per-row active
+masking, logprob capture and cache writes all happen inside the loop, so a
+whole turn costs one dispatch and one device->host transfer (the batched
+:class:`GenerationResult` plus the updated ``lengths``/``stopped`` vectors)
+instead of ``max_new_tokens`` round-trips.  The loop exits early once every
+row has stopped.  To bound jit recompiles, the output buffer width is
+``max_new_tokens`` bucketed up to a multiple of 32 (the actual budget is a
+dynamic operand), and prefill lengths are bucketed the same way; rows that
+exhaust ``max_len`` are marked ``stopped`` so later turns never resample
+them.  A per-token Python-loop reference (``generate_reference``) is kept
+for parity tests and the decode-throughput benchmark.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +42,52 @@ BUCKET = 32
 
 def _bucket(n: int) -> int:
     return max(BUCKET, ((n + BUCKET - 1) // BUCKET) * BUCKET)
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """One turn of batched sampling.
+
+    ``tokens``/``logprobs`` are right-padded (B, T) host arrays; row ``b``
+    holds ``counts[b]`` real entries (the pad id can also be a legitimately
+    sampled token, so always slice by ``counts``).  Iterating yields
+    ``(token_lists, logprob_lists)`` for tuple-unpack compatibility with the
+    per-row list API.
+    """
+    tokens: np.ndarray             # (B, T) int32
+    logprobs: np.ndarray           # (B, T) float32
+    counts: np.ndarray             # (B,) int32 — real entries per row
+
+    @property
+    def batch(self) -> int:
+        return self.tokens.shape[0]
+
+    def token_lists(self) -> List[List[int]]:
+        return [self.tokens[b, : int(self.counts[b])].tolist()
+                for b in range(self.batch)]
+
+    def logprob_lists(self) -> List[np.ndarray]:
+        return [np.asarray(self.logprobs[b, : int(self.counts[b])],
+                           np.float32) for b in range(self.batch)]
+
+    @classmethod
+    def from_lists(cls, token_lists: Sequence[Sequence[int]],
+                   logprob_lists: Sequence[Sequence[float]],
+                   pad_id: int = 0) -> "GenerationResult":
+        B = len(token_lists)
+        T = max((len(t) for t in token_lists), default=0)
+        toks = np.full((B, T), pad_id, np.int32)
+        lps = np.zeros((B, T), np.float32)
+        counts = np.zeros((B,), np.int32)
+        for b, (t, l) in enumerate(zip(token_lists, logprob_lists)):
+            toks[b, : len(t)] = t
+            lps[b, : len(l)] = np.asarray(l, np.float32)
+            counts[b] = len(t)
+        return cls(tokens=toks, logprobs=lps, counts=counts)
+
+    def __iter__(self):
+        yield self.token_lists()
+        yield self.logprob_lists()
 
 
 @dataclasses.dataclass
@@ -59,6 +116,8 @@ class GenerationEngine:
         self.window = window
         self._prefill_jit = jax.jit(self._prefill_impl)
         self._decode_jit = jax.jit(self._decode_impl)
+        self._loop_jit = jax.jit(self._decode_loop_impl,
+                                 static_argnames=("T",))
 
     # ------------------------------------------------------------- impl fns
     def _prefill_impl(self, params, cache, tokens, positions, valid, cross_kv):
@@ -68,14 +127,65 @@ class GenerationEngine:
             kv_valid=valid, **kw)
         return logits, new_cache
 
-    def _decode_impl(self, params, cache, tokens, positions, valid, key,
-                     temperature, cross_kv):
+    def _decode_impl(self, params, cache, tokens, positions, valid, cross_kv):
+        """One-token step for the Python-loop reference decoder."""
         kw = {"cross_kv": cross_kv} if self.model.cfg.family == "encdec" else {}
         logits, new_cache = self.model.decode_step(
             params, tokens, positions, cache, window=self.window,
             kv_valid=valid[:, None], **kw)
-        logits = logits[:, 0, :]                       # (B,V)
-        return None, None, logits, new_cache
+        return logits[:, 0, :], new_cache
+
+    def _decode_loop_impl(self, params, cache, last_logits, lengths, stopped,
+                          key, n_max, temperature, stop_arr, cross_kv, *, T):
+        """Fused decode turn: a while_loop carrying the cache on device.
+
+        ``T`` (static) is the bucketed output-buffer width; ``n_max``
+        (dynamic, <= T) is the actual token budget, so different budgets in
+        the same bucket share one executable.  Each iteration samples from
+        ``last_logits``, records the token + sampling logprob for active
+        rows, writes the token into the cache (pads carry kv_valid=False),
+        and deactivates rows that emitted a stop id or filled the context.
+        """
+        B = last_logits.shape[0]
+        pad = jnp.int32(self.pad_id)
+        max_pos = jnp.int32(self.max_len - 1)
+        kw = {"cross_kv": cross_kv} if self.model.cfg.family == "encdec" else {}
+
+        def cond(carry):
+            t, _, _, _, _, active, _, _, _ = carry
+            return (t < n_max) & jnp.any(active)
+
+        def body(carry):
+            t, key, cache, last_logits, lengths, active, toks, lps, counts = carry
+            key, sub = jax.random.split(key)
+            tok, lp = _sample(last_logits, sub, temperature)
+            tok = tok.astype(jnp.int32)
+            accept = active
+            toks = toks.at[:, t].set(jnp.where(accept, tok, pad))
+            lps = lps.at[:, t].set(jnp.where(accept, lp, 0.0))
+            counts = counts + accept.astype(jnp.int32)
+            hit_stop = jnp.any(tok[:, None] == stop_arr[None, :], axis=-1)
+            feed = jnp.where(accept, tok, pad)[:, None]
+            pos = lengths[:, None]
+            logits, cache = self.model.decode_step(
+                params, feed, pos, cache, window=self.window,
+                kv_valid=accept[:, None], **kw)
+            last_logits = jnp.where(accept[:, None], logits[:, 0, :],
+                                    last_logits)
+            lengths = lengths + accept.astype(lengths.dtype)
+            active = accept & ~hit_stop & (lengths < max_pos)
+            return (t + 1, key, cache, last_logits, lengths, active,
+                    toks, lps, counts)
+
+        init = (jnp.int32(0), key, cache, last_logits, lengths,
+                (~stopped) & (lengths < max_pos),
+                jnp.full((B, T), pad, jnp.int32),
+                jnp.zeros((B, T), jnp.float32),
+                jnp.zeros((B,), jnp.int32))
+        (_, _, cache, last_logits, lengths, _, toks, lps, counts) = \
+            jax.lax.while_loop(cond, body, init)
+        stopped = stopped | (lengths >= max_pos)
+        return toks, lps, counts, cache, last_logits, lengths, stopped
 
     # ------------------------------------------------------------- session ops
     def start(self, contexts: List[List[int]], prefix_embeds=None) -> DecodeSession:
@@ -129,11 +239,47 @@ class GenerationEngine:
 
     def generate(self, session: DecodeSession, max_new_tokens: int,
                  key: jax.Array, temperature: Optional[float] = None
-                 ) -> Tuple[List[List[int]], List[np.ndarray]]:
+                 ) -> GenerationResult:
         """Sample per-row continuations until a stop id / budget / max_len.
 
-        Returns (tokens, logprobs) per row — only tokens up to and including
-        the stop id are kept.  Rows already stopped generate nothing.
+        Runs the fused on-device decode loop; the result (including the stop
+        id, when one was emitted) comes back as one batched
+        :class:`GenerationResult`.  Rows already stopped generate nothing;
+        rows that fill the context are marked ``session.stopped`` so later
+        turns skip them.
+        """
+        temp = self.temperature if temperature is None else temperature
+        T = _bucket(max_new_tokens)
+        stop_arr = jnp.asarray(np.asarray(self.stop_ids, np.int32)
+                               .reshape(-1))
+        toks, lps, counts, cache, last_logits, lengths, stopped = \
+            self._loop_jit(
+                self.params, session.cache, session.last_logits,
+                jnp.asarray(session.lengths, jnp.int32),
+                jnp.asarray(session.stopped), key,
+                jnp.int32(min(max_new_tokens, T)), jnp.float32(temp),
+                stop_arr, session.cross_kv, T=T)
+        session.cache = cache
+        session.last_logits = last_logits
+        # single host materialization per turn
+        toks, lps, counts, lengths, stopped = jax.device_get(
+            (toks, lps, counts, lengths, stopped))
+        # writable host copies (device_get buffers are read-only; rollout
+        # mutates session.stopped per row)
+        session.lengths = np.array(lengths, np.int64)
+        session.stopped = np.array(stopped, bool)
+        return GenerationResult(tokens=np.asarray(toks),
+                                logprobs=np.asarray(lps),
+                                counts=np.asarray(counts))
+
+    def generate_reference(self, session: DecodeSession, max_new_tokens: int,
+                           key: jax.Array, temperature: Optional[float] = None
+                           ) -> GenerationResult:
+        """Per-token Python-loop decoder (the seed implementation).
+
+        Semantically identical to :meth:`generate` — kept as the parity
+        oracle (tests/test_serving.py) and the baseline the decode-throughput
+        benchmark measures the fused loop against.
         """
         temp = self.temperature if temperature is None else temperature
         B = session.batch
@@ -144,9 +290,9 @@ class GenerationEngine:
         for _ in range(max_new_tokens):
             if not active.any():
                 break
-            # sample the next token for every row from the current logits
             key, sub = jax.random.split(key)
-            cur_tok, cur_lp = _sample(session.last_logits, sub, temp)
+            cur_tok, cur_lp = _sample(session.last_logits, sub,
+                                      jnp.float32(temp))
             cur_tok, cur_lp = np.asarray(cur_tok), np.asarray(cur_lp)
             accept = active.copy()
             for i in range(B):
@@ -156,40 +302,43 @@ class GenerationEngine:
                     out_logps[i].append(float(cur_lp[i]))
                     if t in self.stop_ids:
                         active[i] = False
-            # write accepted tokens into the cache; get logits for the next step
             feed = np.where(accept, cur_tok, self.pad_id).astype(np.int32)
             pos = session.lengths.astype(np.int32)
-            _, _, logits, session.cache = self._decode_jit(
+            logits, session.cache = self._decode_jit(
                 self.params, session.cache, jnp.asarray(feed)[:, None],
-                jnp.asarray(pos)[:, None], jnp.asarray(accept), key,
-                jnp.float32(temp), session.cross_kv)
+                jnp.asarray(pos)[:, None], jnp.asarray(accept),
+                session.cross_kv)
             session.last_logits = jnp.where(jnp.asarray(accept)[:, None],
                                             logits, session.last_logits)
             session.lengths = session.lengths + accept.astype(np.int64)
             active &= session.lengths < self.max_len - 1
 
-        return out_tokens, [np.array(l, np.float32) for l in out_logps]
+        session.stopped = session.stopped | (session.lengths >= self.max_len - 1)
+        return GenerationResult.from_lists(out_tokens, out_logps,
+                                           pad_id=self.pad_id)
 
 
 def _sample(logits: jnp.ndarray, key: jax.Array, temperature) -> tuple:
     """Returns (token (B,), logprob-of-token (B,)) at the given temperature.
 
-    The recorded logprob is the *temperature-1 policy* logprob, which is what
-    the RL update needs (the behaviour distribution used for sampling may be
-    tempered, but pi_theta is defined at temperature 1... For faithfulness to
-    veRL/RLFactory we record logprobs of the sampling distribution itself).
+    The recorded logprob is taken from the *sampling distribution itself*
+    (softmax of ``logits / temperature``), matching veRL/RLFactory: the
+    behaviour distribution the importance ratio divides by is the tempered
+    one actually used to draw the token.  Greedy decoding (temperature ~ 0)
+    is a delta distribution, so its logprob is 0.
     """
-    logp = jax.nn.log_softmax(logits, axis=-1)
-    greedy = jnp.argmax(logits, axis=-1)
+    temperature = jnp.asarray(temperature, jnp.float32)
 
     def do_sample(_):
         scaled = jax.nn.log_softmax(logits / jnp.maximum(temperature, 1e-6),
                                     axis=-1)
         tok = jax.random.categorical(key, scaled, axis=-1)
-        return tok
+        lp = jnp.take_along_axis(scaled, tok[:, None], axis=-1)[:, 0]
+        return tok, lp
 
-    temperature = jnp.asarray(temperature, jnp.float32)
-    tok = jax.lax.cond(temperature > 1e-6, do_sample, lambda _: greedy,
-                       operand=None)
-    lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
-    return tok, lp
+    def do_greedy(_):
+        tok = jnp.argmax(logits, axis=-1)
+        return tok, jnp.zeros(logits.shape[:-1], jnp.float32)
+
+    return jax.lax.cond(temperature > 1e-6, do_sample, do_greedy,
+                        operand=None)

@@ -1,0 +1,174 @@
+"""Minimal offline stand-in for the ``hypothesis`` property-testing library.
+
+The tier-1 suite uses a small slice of hypothesis (``given``, ``settings``
+and a handful of strategies).  The real package is not installable in
+network-less environments, so ``conftest.py`` registers this module under
+the ``hypothesis`` name when the import fails.  It is NOT a general
+replacement: strategies draw pseudo-random examples from a fixed seed (no
+shrinking, no example database), which preserves the property-test intent —
+each test still runs against ``max_examples`` generated inputs — while
+keeping collection deterministic and dependency-free.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+from typing import Any, Callable, Optional
+
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    """Wraps draw(rnd) -> value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], name: str = "strategy"):
+        self._draw = draw
+        self._name = name
+
+    def draw(self, rnd: random.Random) -> Any:
+        return self._draw(rnd)
+
+    def __repr__(self):
+        return f"<stub {self._name}>"
+
+
+class _DataObject:
+    """Value produced by ``st.data()``: allows interactive draws in-test."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: _Strategy, label: Optional[str] = None) -> Any:
+        return strategy.draw(self._rnd)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rnd: _DataObject(rnd), "data()")
+
+
+# --------------------------------------------------------------- strategies
+def integers(min_value: int = -(2 ** 16), max_value: int = 2 ** 16) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value), "integers")
+
+
+def floats(min_value: float = -1e6, max_value: float = 1e6,
+           width: int = 64, allow_nan: bool = False,
+           allow_infinity: bool = False, **_) -> _Strategy:
+    def draw(rnd: random.Random) -> float:
+        # hit the endpoints and zero occasionally — the interesting cases
+        r = rnd.random()
+        if r < 0.05:
+            v = min_value
+        elif r < 0.10:
+            v = max_value
+        elif r < 0.15 and min_value <= 0.0 <= max_value:
+            v = 0.0
+        else:
+            v = rnd.uniform(min_value, max_value)
+        if width == 32:
+            import numpy as np
+            v = float(np.float32(v))
+        return v
+    return _Strategy(draw, "floats")
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          **_) -> _Strategy:
+    def draw(rnd: random.Random) -> list:
+        n = rnd.randint(min_size, max_size)
+        return [elements.draw(rnd) for _ in range(n)]
+    return _Strategy(draw, "lists")
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))], "sampled_from")
+
+
+def characters(codec: Optional[str] = None, **_) -> _Strategy:
+    def draw(rnd: random.Random) -> str:
+        r = rnd.random()
+        if r < 0.6:                       # mostly ASCII
+            cp = rnd.randint(0x20, 0x7E)
+        elif r < 0.8:                     # latin-1 / BMP text
+            cp = rnd.randint(0xA0, 0x2FFF)
+        else:                             # anywhere, skipping surrogates
+            cp = rnd.randint(0x0, 0x10FFFF)
+            while 0xD800 <= cp <= 0xDFFF:
+                cp = rnd.randint(0x0, 0x10FFFF)
+        return chr(cp)
+    return _Strategy(draw, "characters")
+
+
+def text(alphabet: Optional[_Strategy] = None, min_size: int = 0,
+         max_size: int = 20, **_) -> _Strategy:
+    alpha = alphabet or characters()
+    def draw(rnd: random.Random) -> str:
+        n = rnd.randint(min_size, max_size)
+        return "".join(alpha.draw(rnd) for _ in range(n))
+    return _Strategy(draw, "text")
+
+
+def data() -> _Strategy:
+    return _DataStrategy()
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rnd: rnd.random() < 0.5, "booleans")
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rnd: value, "just")
+
+
+# --------------------------------------------------------------- decorators
+def settings(max_examples: int = 100, deadline=None, **_):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy, **kw_strategies: _Strategy):
+    def deco(fn):
+        max_examples = getattr(fn, "_stub_max_examples", 100)
+
+        def wrapper():
+            rnd = random.Random(_SEED)
+            for example in range(max_examples):
+                args = [s.draw(rnd) for s in strategies]
+                kwargs = {k: s.draw(rnd) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:
+                    shown = [a for a in args if not isinstance(a, _DataObject)]
+                    raise AssertionError(
+                        f"stub-hypothesis falsified {fn.__name__} on example "
+                        f"{example}: args={shown!r} kwargs={kwargs!r}") from e
+
+        # copy identity but NOT __wrapped__ — pytest would otherwise
+        # introspect the original signature and demand fixtures for the
+        # drawn-argument names
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` / ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "sampled_from", "characters",
+                 "text", "data", "booleans", "just"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

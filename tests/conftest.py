@@ -9,6 +9,15 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# hypothesis is unavailable in network-less environments; fall back to the
+# minimal stub so the property-test modules still collect and run
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    _hypothesis_stub.install()
+
 jax.config.update("jax_enable_x64", False)
 
 

@@ -87,6 +87,26 @@ def test_concurrency_cap():
     assert wall >= 0.06
 
 
+def test_execute_batch_inside_running_loop():
+    """Regression: the webui/serving path calls execute_batch from sync code
+    running inside an event loop; asyncio.run would raise "event loop
+    already running" there."""
+    reg = _latency_registry(0.01)
+    ax = AsyncToolExecutor(reg)
+    batch = [[ToolCall("slow", {"x": i}, 0)] for i in range(4)]
+
+    async def driver():
+        # synchronous call from within a running loop
+        return ax.execute_batch(batch)
+
+    out = asyncio.run(driver())
+    assert all(r[0].ok for r in out)
+    assert [r[0].content for r in out] == [f"ok:{i}" for i in range(4)]
+    # and it still works from plain sync context afterwards
+    out2 = ax.execute_batch(batch)
+    assert all(r[0].ok for r in out2)
+
+
 def test_empty_rows():
     reg = _latency_registry()
     out = AsyncToolExecutor(reg).execute_batch([[], [ToolCall("slow", {"x": 1}, 0)], []])

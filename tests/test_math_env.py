@@ -69,12 +69,15 @@ def test_full_rollout_with_scripted_policy(env):
 
         def generate(self, session, n, key, temperature=None):
             import numpy as np
+            from repro.serving.engine import GenerationResult
             texts = [f"<tool_call>calculate: {expr}</tool_call>",
                      f"<answer>{gt}</answer>"]
             t = texts[min(self.turn, 1)]
             self.turn += 1
             toks = [tok.encode(t)]
-            return toks, [np.zeros(len(toks[0]), np.float32)]
+            return GenerationResult.from_lists(
+                toks, [np.zeros(len(toks[0]), np.float32)],
+                pad_id=tok.pad_id)
 
         def extend(self, session, new_tokens):
             pass

@@ -49,12 +49,13 @@ class ScriptedEngine:
                              stopped=np.zeros(len(contexts), bool))
 
     def generate(self, session, n, key, temperature=None):
+        from repro.serving.engine import GenerationResult
         text = self.turns[min(self.turn, len(self.turns) - 1)]
         self.turn += 1
         toks = [[] if session.stopped[i] else self.tok.encode(text)
                 for i in range(session.batch)]
         lps = [np.full(len(t), -1.0, np.float32) for t in toks]
-        return toks, lps
+        return GenerationResult.from_lists(toks, lps, pad_id=self.tok.pad_id)
 
     def extend(self, session, new_tokens):
         self.extended.append(new_tokens)
