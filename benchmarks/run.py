@@ -8,10 +8,12 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bench_async_throughput, bench_decode_throughput,
-                            bench_kernels, bench_training_curve, roofline)
+    from benchmarks import (bench_async_throughput, bench_continuous_rollout,
+                            bench_decode_throughput, bench_kernels,
+                            bench_training_curve, roofline)
     all_rows = []
     for mod, label in ((bench_async_throughput, "table1_async_throughput"),
+                       (bench_continuous_rollout, "continuous_rollout"),
                        (bench_decode_throughput, "decode_throughput"),
                        (bench_kernels, "kernels"),
                        (bench_training_curve, "fig5_training_curve"),

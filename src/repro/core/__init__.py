@@ -2,16 +2,18 @@
 GRPO/PPO, diverse rewards, trainer."""
 from repro.core.async_engine import AsyncToolExecutor, SerialToolExecutor
 from repro.core.grpo import GRPOConfig, grpo_advantages, grpo_loss, make_grpo_train_step
-from repro.core.mdp import Role, Segment, Trajectory, to_training_batch
+from repro.core.mdp import (Role, STOP_REASONS, Segment, Trajectory,
+                            to_training_batch)
 from repro.core.rewards import (ModelJudgeReward, RewardComposer, RuleReward,
                                 ToolVerifyReward)
 from repro.core.rollout import RolloutConfig, RolloutWorker
+from repro.core.scheduler import ContinuousScheduler
 from repro.core.trainer import RLTrainer, TrainerConfig
 
 __all__ = [
     "AsyncToolExecutor", "SerialToolExecutor", "GRPOConfig", "grpo_advantages",
-    "grpo_loss", "make_grpo_train_step", "Role", "Segment", "Trajectory",
-    "to_training_batch", "ModelJudgeReward", "RewardComposer", "RuleReward",
-    "ToolVerifyReward", "RolloutConfig", "RolloutWorker", "RLTrainer",
-    "TrainerConfig",
+    "grpo_loss", "make_grpo_train_step", "Role", "STOP_REASONS", "Segment",
+    "Trajectory", "to_training_batch", "ModelJudgeReward", "RewardComposer",
+    "RuleReward", "ToolVerifyReward", "RolloutConfig", "RolloutWorker",
+    "ContinuousScheduler", "RLTrainer", "TrainerConfig",
 ]

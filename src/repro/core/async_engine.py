@@ -1,60 +1,31 @@
 """Asynchronous parallel tool invocation (paper §1 contribution 1, §2.3.2).
 
 During a rollout turn, every trajectory in the batch may issue tool calls.
-The async executor fans *all* of them out concurrently with
-``asyncio.gather`` (bounded by a semaphore), so one slow tool never blocks
-the batch; the serial executor is the baseline the paper's 6.8x throughput
-claim is measured against (benchmarks/bench_async_throughput.py).
+Two consumption modes are supported:
+
+  * **barrier** (``execute_batch``): fan all calls of the whole batch out
+    concurrently with ``asyncio.gather`` and block until every result is in —
+    the turn-synchronous rollout path;
+  * **futures** (``submit`` / ``drain_ready`` / ``wait_ready``): hand one
+    trajectory's calls to the persistent background loop and return a future
+    immediately, so the caller can keep decoding the rest of the batch while
+    the tool I/O is in flight — the continuous-batching rollout scheduler's
+    path (core/scheduler.py).  ``drain_ready`` is non-blocking;
+    ``wait_ready`` blocks until at least one in-flight row completes.
+
+The serial executor is the baseline the paper's 6.8x throughput claim is
+measured against (benchmarks/bench_async_throughput.py).
 """
 from __future__ import annotations
 
 import asyncio
+import concurrent.futures
 import threading
 import time
 from typing import List, Optional, Sequence
 
+from repro.tools.background import BackgroundLoop as _BackgroundLoop
 from repro.tools.registry import ToolCall, ToolRegistry, ToolResult
-
-
-class _BackgroundLoop:
-    """A daemon thread running a persistent asyncio loop.
-
-    ``execute_batch`` must be callable from synchronous code that is itself
-    running *inside* an event loop (the webui/serving path drives rollouts
-    from async handlers); ``asyncio.run`` would raise "event loop already
-    running" there.  Coroutines are instead submitted to this loop and the
-    calling thread blocks on the future.
-    """
-
-    _lock = threading.Lock()
-    _shared: Optional["_BackgroundLoop"] = None
-
-    def __init__(self):
-        self.loop = asyncio.new_event_loop()
-        self.thread = threading.Thread(target=self.loop.run_forever,
-                                       name="tool-executor-loop", daemon=True)
-        self.thread.start()
-
-    @classmethod
-    def shared(cls) -> "_BackgroundLoop":
-        with cls._lock:
-            if cls._shared is None or not cls._shared.thread.is_alive():
-                cls._shared = cls()
-            return cls._shared
-
-    def run(self, coro):
-        try:
-            current = asyncio.get_running_loop()
-        except RuntimeError:
-            current = None
-        if current is self.loop:
-            # re-entered from our own thread (a tool calling execute_batch):
-            # blocking here would deadlock the loop — fail fast instead
-            coro.close()
-            raise RuntimeError(
-                "execute_batch called from the tool-executor loop itself; "
-                "await execute_batch_async instead")
-        return asyncio.run_coroutine_threadsafe(coro, self.loop).result()
 
 
 class AsyncToolExecutor:
@@ -64,11 +35,17 @@ class AsyncToolExecutor:
         self.registry = registry
         self.max_concurrency = max_concurrency
         self.stats = {"batches": 0, "calls": 0, "wall_s": 0.0, "tool_s": 0.0}
+        self._stats_lock = threading.Lock()
+        self._inflight: List[concurrent.futures.Future] = []
+        self._inflight_lock = threading.Lock()
+        self._row_sem = None          # (loop, asyncio.Semaphore) pair
+        self._sem_lock = threading.Lock()
 
     async def _guarded(self, sem: asyncio.Semaphore, call: ToolCall) -> ToolResult:
         async with sem:
             return await self.registry.call_async(call)
 
+    # -------------------------------------------------------- barrier mode
     async def execute_batch_async(
             self, batch_calls: Sequence[List[ToolCall]]) -> List[List[ToolResult]]:
         sem = asyncio.Semaphore(self.max_concurrency)
@@ -82,10 +59,11 @@ class AsyncToolExecutor:
             out[i].append(r)
         for row in out:  # stable order by call_id within a trajectory
             row.sort(key=lambda r: r.call_id)
-        self.stats["batches"] += 1
-        self.stats["calls"] += len(flat)
-        self.stats["wall_s"] += wall
-        self.stats["tool_s"] += sum(r.latency_s for r in results)
+        with self._stats_lock:
+            self.stats["batches"] += 1
+            self.stats["calls"] += len(flat)
+            self.stats["wall_s"] += wall
+            self.stats["tool_s"] += sum(r.latency_s for r in results)
         return out
 
     def execute_batch(self, batch_calls: Sequence[List[ToolCall]]
@@ -98,6 +76,79 @@ class AsyncToolExecutor:
         # batch to the persistent background loop instead of asyncio.run.
         return _BackgroundLoop.shared().run(
             self.execute_batch_async(batch_calls))
+
+    # -------------------------------------------------------- futures mode
+    def _loop_semaphore(self, loop) -> asyncio.Semaphore:
+        """Per-background-loop concurrency cap shared by all submitted rows
+        (recreated if the shared loop was ever replaced)."""
+        with self._sem_lock:
+            if self._row_sem is None or self._row_sem[0] is not loop:
+                async def _mk():
+                    return asyncio.Semaphore(self.max_concurrency)
+                sem = asyncio.run_coroutine_threadsafe(_mk(), loop).result()
+                self._row_sem = (loop, sem)
+            return self._row_sem[1]
+
+    async def _execute_row(self, sem, calls: List[ToolCall]) -> List[ToolResult]:
+        t0 = time.monotonic()
+        results = list(await asyncio.gather(
+            *(self._guarded(sem, c) for c in calls)))
+        results.sort(key=lambda r: r.call_id)
+        with self._stats_lock:
+            self.stats["calls"] += len(calls)
+            self.stats["wall_s"] += time.monotonic() - t0
+            self.stats["tool_s"] += sum(r.latency_s for r in results)
+        return results
+
+    def submit(self, calls: Sequence[ToolCall]) -> concurrent.futures.Future:
+        """Non-blocking: fan one trajectory's calls out on the persistent
+        background loop; returns a future of ``List[ToolResult]`` (ordered by
+        call_id).  The caller keeps decoding while the I/O is in flight."""
+        bg = _BackgroundLoop.shared()
+        sem = self._loop_semaphore(bg.loop)
+        fut = bg.submit(self._execute_row(sem, list(calls)))
+        with self._inflight_lock:
+            self._inflight.append(fut)
+        return fut
+
+    def drain_ready(self, futures=None) -> List[concurrent.futures.Future]:
+        """Non-blocking: pop and return completed in-flight futures (in
+        submission order); the rest stay in flight.  ``futures`` restricts
+        the drain to a subset the caller owns, so independent consumers can
+        share one executor without stealing each other's completions."""
+        with self._inflight_lock:
+            sel = (list(self._inflight) if futures is None
+                   else [f for f in self._inflight if f in futures])
+            done = set(f for f in sel if f.done())
+            if done:
+                self._inflight = [f for f in self._inflight if f not in done]
+        return [f for f in sel if f in done]
+
+    def wait_ready(self, timeout: Optional[float] = None, futures=None
+                   ) -> List[concurrent.futures.Future]:
+        """Block until at least one (owned) in-flight future completes — or
+        timeout — then drain: the scheduler calls this when every slot is
+        parked."""
+        with self._inflight_lock:
+            sel = (list(self._inflight) if futures is None
+                   else [f for f in self._inflight if f in futures])
+        if not sel:
+            return []
+        concurrent.futures.wait(
+            sel, timeout=timeout,
+            return_when=concurrent.futures.FIRST_COMPLETED)
+        return self.drain_ready(futures)
+
+    def forget(self, futures) -> None:
+        """Stop tracking the given futures (they still complete on the
+        background loop; results are dropped) — used by consumers that
+        abandon a trajectory stream with rows still parked."""
+        with self._inflight_lock:
+            self._inflight = [f for f in self._inflight if f not in futures]
+
+    @property
+    def n_inflight(self) -> int:
+        return len(self._inflight)
 
     @property
     def overlap_factor(self) -> float:
@@ -112,13 +163,15 @@ class SerialToolExecutor:
         self.registry = registry
         self.stats = {"batches": 0, "calls": 0, "wall_s": 0.0, "tool_s": 0.0}
 
-    def execute_batch(self, batch_calls: Sequence[List[ToolCall]]
-                      ) -> List[List[ToolResult]]:
+    async def execute_batch_async(
+            self, batch_calls: Sequence[List[ToolCall]]) -> List[List[ToolResult]]:
         t0 = time.monotonic()
         out: List[List[ToolResult]] = []
         n = 0
         for calls in batch_calls:
-            row = [self.registry.call_sync(c) for c in calls]
+            row: List[ToolResult] = []
+            for c in calls:          # strictly one at a time — the baseline
+                row.append(await self.registry.call_async(c))
             n += len(row)
             out.append(row)
         wall = time.monotonic() - t0
@@ -127,3 +180,16 @@ class SerialToolExecutor:
         self.stats["wall_s"] += wall
         self.stats["tool_s"] += sum(r.latency_s for row in out for r in row)
         return out
+
+    def execute_batch(self, batch_calls: Sequence[List[ToolCall]]
+                      ) -> List[List[ToolResult]]:
+        """Serial execution that is safe for coroutine tools driven from
+        async serving code: like the async executor, it detects a running
+        event loop and routes through the persistent background loop instead
+        of crashing in ``asyncio.run`` (the awaits stay sequential)."""
+        try:
+            asyncio.get_running_loop()
+        except RuntimeError:
+            return asyncio.run(self.execute_batch_async(batch_calls))
+        return _BackgroundLoop.shared().run(
+            self.execute_batch_async(batch_calls))

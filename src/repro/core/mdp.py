@@ -15,6 +15,12 @@ from typing import Any, List, Optional
 import numpy as np
 
 
+# Every way a multi-turn episode can end (Trajectory.stop_reason); the
+# trainer logs the distribution so over-budget rows are distinguishable from
+# answered ones in the metrics.
+STOP_REASONS = ("answer", "no_call", "tool_budget", "max_len", "max_turns")
+
+
 class Role(enum.Enum):
     PROMPT = "prompt"           # task prompt / system prompt (no loss)
     MODEL = "model"             # X tokens: policy actions (loss-masked IN)
@@ -40,6 +46,8 @@ class Trajectory:
     group_id: int = 0           # GRPO group (same prompt => same group)
     n_tool_calls: int = 0
     finished: bool = False      # emitted a final answer (vs hit budget)
+    stop_reason: str = ""       # why the episode ended: "answer" | "no_call"
+    #                             | "tool_budget" | "max_len" | "max_turns"
 
     # ------------------------------------------------------------- building
     def append(self, role: Role, tokens: List[int]) -> None:

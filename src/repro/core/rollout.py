@@ -6,10 +6,23 @@ One RolloutWorker drives a batch of trajectories through multi-turn tool use:
             </answer> or <eos>;
   Parse     ToolManager extracts tool calls / final answers; no call intent
             => the interaction terminates (paper);
-  Invoke    AsyncToolExecutor fans every pending call of the whole batch out
-            concurrently (asyncio) — the paper's throughput contribution;
+  Invoke    pending tool calls go to the asyncio executor — the paper's
+            throughput contribution;
   Update    tool results are formatted, tokenized and appended as OBSERVATION
             tokens (loss-masked out), and the engine's cache is extended.
+
+Two scheduling modes drive that loop:
+
+* ``mode="continuous"`` (default) — :class:`ContinuousScheduler`: per-slot
+  park/retire/refill so decoding overlaps tool I/O and finished rows hand
+  their cache lane to the next queued task (core/scheduler.py).  Requires an
+  executor with the futures API (AsyncToolExecutor); the worker falls back
+  to the reference loop otherwise.
+* ``mode="reference"`` — the turn-synchronous loop kept as the parity
+  oracle (:meth:`RolloutWorker.rollout_reference`): whole-batch Generate, a
+  barrier on ``execute_batch``, whole-batch Update.  Same seed => identical
+  trajectories to the scheduler when tools are instant, because both sample
+  row ``b``'s turn ``k`` from ``fold_in(split(key, B)[b], k)``.
 
 GRPO grouping: each task is replicated ``group_size`` times with a shared
 group_id so the advantage pass can normalize within groups.
@@ -20,10 +33,11 @@ import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
+import jax.numpy as jnp
 
-from repro.core.async_engine import AsyncToolExecutor, SerialToolExecutor
+from repro.core.async_engine import AsyncToolExecutor
 from repro.core.mdp import Role, Trajectory
+from repro.core.scheduler import ContinuousScheduler, _fold_rows
 from repro.serving.engine import GenerationEngine
 
 
@@ -34,6 +48,8 @@ class RolloutConfig:
     temperature: float = 1.0
     group_size: int = 4            # GRPO group size
     seed: int = 0
+    mode: str = "continuous"       # "continuous" | "reference"
+    n_slots: int = 0               # decode-batch slots; 0 => one per traj
 
 
 class RolloutWorker:
@@ -47,12 +63,50 @@ class RolloutWorker:
         stop = {tokenizer.eos_id, tokenizer.answer_end_id,
                 tokenizer.tool_call_end_id}
         self.engine.stop_ids = tuple(stop)
+        self.scheduler = ContinuousScheduler(engine, env, tokenizer, config,
+                                             self.executor)
+        self.last_stats: dict = {}
 
     # ------------------------------------------------------------------ API
     def rollout(self, tasks: Sequence[Tuple[str, object]], key: jax.Array,
                 group_size: Optional[int] = None) -> List[Trajectory]:
         """tasks: (question, ground_truth) pairs.  Returns group_size
-        trajectories per task (same group_id)."""
+        trajectories per task (same group_id), in task x group order."""
+        continuous = (self.config.mode != "reference"
+                      and hasattr(self.executor, "submit"))
+        if continuous:
+            trajs = self.scheduler.run(tasks, key, group_size=group_size)
+            self.last_stats = dict(self.scheduler.last_stats)
+            return trajs
+        return self.rollout_reference(tasks, key, group_size=group_size)
+
+    def rollout_stream(self, tasks, key, group_size=None):
+        """Yield trajectories in completion order as slots retire (the
+        scheduler's trajectory stream).  Falls back to the reference loop —
+        yielding in task x group order once it finishes — under the same
+        conditions as :meth:`rollout`."""
+        continuous = (self.config.mode != "reference"
+                      and hasattr(self.executor, "submit"))
+        if not continuous:
+            yield from self.rollout_reference(tasks, key,
+                                              group_size=group_size)
+            return
+        try:
+            yield from self.scheduler.stream(tasks, key,
+                                             group_size=group_size)
+        finally:
+            # runs even when the consumer abandons the stream early, so
+            # last_stats never carries a previous rollout's numbers
+            self.last_stats = dict(self.scheduler.last_stats)
+
+    # ------------------------------------------------------- reference loop
+    def rollout_reference(self, tasks: Sequence[Tuple[str, object]],
+                          key: jax.Array,
+                          group_size: Optional[int] = None
+                          ) -> List[Trajectory]:
+        """Turn-synchronous rollout (the seed implementation): the whole
+        batch generates, barriers on the executor, prefills together.  Kept
+        as the scheduler's parity oracle and the benchmark baseline."""
         gs = self.config.group_size if group_size is None else group_size
         trajs: List[Trajectory] = []
         for gid, (q, gt) in enumerate(tasks):
@@ -65,15 +119,22 @@ class RolloutWorker:
                 tr.append(Role.PROMPT, prompt_ids)
                 tr.meta["logprobs"].extend([0.0] * len(prompt_ids))
                 trajs.append(tr)
+        if not trajs:
+            return trajs
 
         session = self.engine.start([t.tokens() for t in trajs])
+        # one PRNG stream per trajectory (fold_in per turn, then per step in
+        # the engine) — the same streams the continuous scheduler uses, so
+        # both modes sample identical tokens row-for-row
+        traj_keys = jax.random.split(key, len(trajs))
 
         for turn in range(self.config.max_turns):
             # ---- Generate
-            key, sub = jax.random.split(key)
+            row_keys = _fold_rows(
+                traj_keys, jnp.full((len(trajs),), turn, jnp.int32))
             res = self.engine.generate(
-                session, self.config.max_new_tokens, sub,
-                temperature=self.config.temperature)
+                session, self.config.max_new_tokens, None,
+                temperature=self.config.temperature, row_keys=row_keys)
 
             # ---- Parse (consume the batched (B, T) result row-wise)
             batch_calls = [[] for _ in trajs]
@@ -91,6 +152,9 @@ class RolloutWorker:
                 over_budget = tr.n_tool_calls + len(calls) > self.env.max_tool_calls
                 if answer is not None or not calls or over_budget:
                     tr.finished = answer is not None
+                    tr.stop_reason = ("answer" if answer is not None else
+                                      "no_call" if not calls else
+                                      "tool_budget")
                     session.stopped[i] = True
                 else:
                     batch_calls[i] = calls
@@ -100,7 +164,7 @@ class RolloutWorker:
             if not any_call or turn == self.config.max_turns - 1:
                 break
 
-            # ---- Invoke (async, batch-wide)
+            # ---- Invoke (async, batch-wide barrier)
             results = self.executor.execute_batch(batch_calls)
 
             # ---- Update
@@ -116,4 +180,11 @@ class RolloutWorker:
                     obs_tokens.append([])
             self.engine.extend(session, obs_tokens)
 
+        for i, tr in enumerate(trajs):
+            if not tr.stop_reason:
+                # never classified by Parse: either the engine stopped the
+                # row (context exhausted) or the turn budget ran out with
+                # tool calls still pending
+                tr.stop_reason = ("max_len" if session.stopped[i]
+                                  else "max_turns")
         return trajs

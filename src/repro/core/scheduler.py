@@ -1,0 +1,364 @@
+"""Continuous-batching rollout scheduler (paper §2.3.2, taken past Fig. 4).
+
+The turn-synchronous loop (``RolloutWorker.rollout_reference``) couples every
+trajectory to the slowest tool call of the batch: Generate for everyone,
+barrier on the tool results, prefill everyone, repeat — the GPU idles during
+every tool call and finished rows occupy dead slots until the episode ends.
+This module decouples the Generate-Parse-Invoke-Update stages *per
+trajectory* over a fixed pool of decode-batch slots:
+
+park / retire / refill state machine (one slot = one cache lane)::
+
+      task queue ──┐ refill: reset_rows + prompt prefill
+                   ▼
+               ┌────────┐  decode turn   ┌───────┐ tool calls   ┌────────┐
+       ┌──────▶│ ACTIVE │───────────────▶│ parse │─────────────▶│ PARKED │
+       │       └────────┘                └───┬───┘  submit()    └───┬────┘
+       │ obs prefill (extend_rows)           │ answer / no_call     │
+       └─────────────────────────────────────┼─ / tool_budget       │
+                   ▲                         ▼ / max_len/turns      │
+                   └──── results land ── [ RETIRE slot ] ◀──────────┘
+                        (drain_ready)      │
+                                           ▼ yield Trajectory; refill or FREE
+
+* A slot whose row emitted tool calls hands them to the background asyncio
+  loop as a future (``executor.submit``) and is **parked**: its session row
+  is marked stopped, so the fused decode loop keeps generating for the
+  remaining active rows while the I/O is in flight — decode and tool latency
+  overlap instead of serializing (the rollout-level version of the paper's
+  6.8x decoupling argument).
+* When a parked row's results land (``executor.drain_ready`` between decode
+  rounds, ``wait_ready`` when nothing is active), the observation is
+  tokenized and prefilled back into *that row's* cache lane
+  (``engine.extend_rows``) and the slot rejoins the decode batch.
+* A row that finishes (``</answer>``, no tool intent, tool budget, context
+  or turn limit) is **retired**: its trajectory is yielded and the slot's
+  cache lane is cleared (``engine.reset_rows``) and re-primed with the next
+  task from the queue, keeping the decode batch full for arbitrarily many
+  tasks with a bounded memory footprint.
+
+Determinism: each trajectory owns a PRNG stream (``split(key, n_trajs)``);
+its k-th decode turn samples from ``fold_in(traj_key, k)`` folded again per
+step inside the engine.  Sampling is therefore independent of which rows
+share a decode round, so with instant tools the scheduler reproduces
+``rollout_reference`` trajectories token-for-token (the parity oracle in
+tests/test_rollout_and_rewards.py).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+import time
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mdp import Role, Trajectory
+from repro.tools.registry import ToolResult
+
+
+# jitted once at module scope: folding the per-trajectory streams with their
+# turn indices runs every decode round, and re-tracing a fresh vmap per call
+# would dominate the round at small batch sizes
+_fold_rows = jax.jit(jax.vmap(jax.random.fold_in))
+
+
+class SlotState(enum.Enum):
+    FREE = "free"          # no occupant; session row is stopped
+    ACTIVE = "active"      # decoding in the fused loop
+    PARKED = "parked"      # waiting on an in-flight tool future
+
+
+@dataclasses.dataclass
+class _Job:
+    """One trajectory waiting for (or occupying) a slot."""
+    index: int                      # position in the returned trajectory list
+    traj: Trajectory
+    prompt_ids: List[int]
+    key: jax.Array                  # per-trajectory PRNG stream
+
+
+@dataclasses.dataclass
+class _Slot:
+    row: int                        # batch row / cache lane this slot owns
+    state: SlotState = SlotState.FREE
+    job: Optional[_Job] = None
+    key: Optional[jax.Array] = None  # occupant's stream (kept after FREE so
+    #                                  the stacked row_keys stay well-formed)
+    turn_idx: int = 0               # decode turns taken by the occupant
+    future: object = None           # executor future while PARKED
+    calls: list = dataclasses.field(default_factory=list)
+
+
+class ContinuousScheduler:
+    """Drives trajectories through Generate-Parse-Invoke-Update with per-slot
+    scheduling.  Requires an executor with the futures API
+    (``submit`` / ``drain_ready`` / ``wait_ready`` — AsyncToolExecutor)."""
+
+    def __init__(self, engine, env, tokenizer, config, executor,
+                 n_slots: int = 0):
+        self.engine = engine
+        self.env = env
+        self.tok = tokenizer
+        self.config = config
+        self.executor = executor
+        self.n_slots = n_slots or getattr(config, "n_slots", 0)
+        self.last_stats: Dict[str, float] = {}
+
+    # ------------------------------------------------------------------ API
+    def run(self, tasks: Sequence[Tuple[str, object]], key: jax.Array,
+            group_size: Optional[int] = None) -> List[Trajectory]:
+        """Roll every task out; returns trajectories in task x group order
+        (the same order the turn-synchronous reference produces)."""
+        out = list(self.stream(tasks, key, group_size=group_size))
+        out.sort(key=lambda t: t.meta["job_index"])
+        for tr in out:
+            tr.meta.pop("job_index", None)
+        return out
+
+    def stream(self, tasks: Sequence[Tuple[str, object]], key: jax.Array,
+               group_size: Optional[int] = None) -> Iterator[Trajectory]:
+        """Yield trajectories as they retire (completion order) — the
+        trajectory stream the trainer consumes.  Scheduler/occupancy stats
+        land in ``self.last_stats`` when the stream is exhausted."""
+        gs = self.config.group_size if group_size is None else group_size
+        jobs = self._build_jobs(tasks, key, gs)
+        n_jobs = len(jobs)
+        if n_jobs == 0:
+            self.last_stats = {}
+            return
+        queue = collections.deque(jobs)
+        B = max(1, min(self.n_slots or n_jobs, n_jobs))
+        slots = [_Slot(row=i) for i in range(B)]
+
+        first = [queue.popleft() for _ in range(B)]
+        session = self.engine.start([j.prompt_ids for j in first])
+        for slot, job in zip(slots, first):
+            slot.job, slot.key, slot.state = job, job.key, SlotState.ACTIVE
+            slot.turn_idx = 0
+
+        by_future: Dict[object, _Slot] = {}
+        stats = {"rounds": 0.0, "gen_s": 0.0, "tool_wait_s": 0.0,
+                 "tool_s": 0.0, "refills": 0.0, "active_slot_rounds": 0.0,
+                 "slot_rounds": 0.0, "model_tokens": 0.0}
+        t_start = time.monotonic()
+        retired: List[Trajectory] = []
+        to_refill: List[_Slot] = []
+
+        def retire(slot: _Slot, reason: str, finished: bool) -> None:
+            slot.job.traj.stop_reason = reason
+            slot.job.traj.finished = finished
+            retired.append(slot.job.traj)
+            slot.future, slot.calls = None, []
+            slot.job, slot.state = None, SlotState.FREE
+            session.stopped[slot.row] = True
+            if queue:
+                to_refill.append(slot)
+
+        def refill() -> None:
+            """Hand every just-freed slot the next queued task in ONE batched
+            reset + prefill (GRPO group members tend to retire together)."""
+            rows, prompts = [], []
+            while to_refill and queue:
+                slot, job = to_refill.pop(), queue.popleft()
+                slot.job, slot.key, slot.state = job, job.key, SlotState.ACTIVE
+                slot.turn_idx = 0
+                rows.append(slot.row)
+                prompts.append(job.prompt_ids)
+            to_refill.clear()
+            if rows:
+                self._reset_rows(session, rows)
+                self._extend_rows(session, rows, prompts)
+                stats["refills"] += len(rows)
+
+        try:
+            yield from self._schedule(session, slots, queue, by_future,
+                                      stats, retired, retire, refill)
+        finally:
+            # set stats even when the consumer abandons the stream early,
+            # and release any still-parked futures from the executor
+            if by_future and hasattr(self.executor, "forget"):
+                self.executor.forget(by_future)
+            wall = time.monotonic() - t_start
+            self.last_stats = {
+                "wall_s": wall,
+                "rounds": stats["rounds"],
+                "gen_s": stats["gen_s"],
+                "tool_wait_s": stats["tool_wait_s"],
+                "refills": stats["refills"],
+                "model_tokens": stats["model_tokens"],
+                "slot_occupancy": (stats["active_slot_rounds"]
+                                   / max(stats["slot_rounds"], 1.0)),
+                "tool_latency_s": stats["tool_s"],
+                "overlap_factor": stats["tool_s"] / max(wall, 1e-9),
+                "n_slots": float(B),
+                "n_trajectories": float(n_jobs),
+            }
+
+    def _schedule(self, session, slots, queue, by_future, stats, retired,
+                  retire, refill) -> Iterator[Trajectory]:
+        """The park/retire/refill loop proper (see module docstring)."""
+        while True:
+            for tr in retired:
+                yield tr
+            retired.clear()
+            refill()
+            parked = [s for s in slots if s.state is SlotState.PARKED]
+            active = [s for s in slots if s.state is SlotState.ACTIVE]
+            if not parked and not active:
+                break
+            if parked:
+                # Overlap point: non-blocking drain while rows are decoding;
+                # block for the first completion only when nothing can decode.
+                # The drain is scoped to our own futures so several consumers
+                # can share one executor.
+                if active:
+                    ready = self.executor.drain_ready(by_future)
+                else:
+                    t0 = time.monotonic()
+                    ready = self.executor.wait_ready(futures=by_future)
+                    stats["tool_wait_s"] += time.monotonic() - t0
+                rows, obs_lists = [], []
+                for fut in ready:
+                    slot = by_future.pop(fut, None)
+                    if slot is None:
+                        continue
+                    ids = self._absorb(session, slot, fut, retire, stats)
+                    if ids is not None:
+                        rows.append(slot.row)
+                        obs_lists.append(ids)
+                        slot.future, slot.calls = None, []
+                        slot.state = SlotState.ACTIVE
+                if rows:
+                    # one batched prefill for every observation that landed
+                    # this round (each row was checked to fit above)
+                    self._extend_rows(session, rows, obs_lists)
+                # absorption revives rows (and retire may refill slots):
+                # re-derive the active set so the parse loop below covers
+                # every row the engine will actually decode this round
+                active = [s for s in slots if s.state is SlotState.ACTIVE]
+                if not active:
+                    continue
+
+            stats["rounds"] += 1
+            stats["slot_rounds"] += len(slots)
+            stats["active_slot_rounds"] += len(active)
+            row_keys = self._row_keys(slots)
+            t0 = time.monotonic()
+            res = self.engine.generate(
+                session, self.config.max_new_tokens, None,
+                temperature=self.config.temperature, row_keys=row_keys)
+            stats["gen_s"] += time.monotonic() - t0
+
+            for slot in active:
+                n_tok = int(res.counts[slot.row])
+                if n_tok == 0:
+                    # the engine refused the row: context exhausted
+                    retire(slot, "max_len", finished=False)
+                    continue
+                row_toks = res.tokens[slot.row, :n_tok].tolist()
+                tr = slot.job.traj
+                tr.append(Role.MODEL, row_toks)
+                tr.meta["logprobs"].extend(
+                    float(x) for x in res.logprobs[slot.row, :n_tok])
+                stats["model_tokens"] += n_tok
+                slot.turn_idx += 1
+                text = self.tok.decode(row_toks)
+                calls, answer = self.env.manager.parse_response(text)
+                over_budget = (tr.n_tool_calls + len(calls)
+                               > self.env.max_tool_calls)
+                if answer is not None or not calls or over_budget:
+                    reason = ("answer" if answer is not None else
+                              "no_call" if not calls else "tool_budget")
+                    retire(slot, reason, finished=answer is not None)
+                    continue
+                tr.n_tool_calls += len(calls)
+                if slot.turn_idx >= self.config.max_turns:
+                    # calls counted but not executed — same contract as the
+                    # reference loop, which breaks before its Invoke stage
+                    retire(slot, "max_turns", finished=False)
+                    continue
+                slot.calls = calls
+                slot.future = self.executor.submit(calls)
+                by_future[slot.future] = slot
+                slot.state = SlotState.PARKED
+                session.stopped[slot.row] = True
+
+    # ------------------------------------------------------------- internals
+    def _build_jobs(self, tasks, key, gs) -> List[_Job]:
+        jobs: List[_Job] = []
+        n = len(tasks) * gs
+        keys = jax.random.split(key, max(n, 1))
+        for gid, (q, gt) in enumerate(tasks):
+            prompt_ids = self.tok.encode(self.env.manager.get_prompt(q),
+                                         add_bos=True)
+            for _ in range(gs):
+                tr = Trajectory(group_id=gid,
+                                meta={"question": q, "ground_truth": gt,
+                                      "logprobs": [],
+                                      "job_index": len(jobs)})
+                tr.append(Role.PROMPT, prompt_ids)
+                tr.meta["logprobs"].extend([0.0] * len(prompt_ids))
+                jobs.append(_Job(index=len(jobs), traj=tr,
+                                 prompt_ids=list(prompt_ids),
+                                 key=keys[len(jobs)]))
+        return jobs
+
+    def _row_keys(self, slots: List[_Slot]) -> jax.Array:
+        """(B, 2) per-row keys: occupant's stream folded with its turn index
+        (idle rows carry their last occupant's key — they never sample)."""
+        keys = jnp.stack([s.key for s in slots])
+        turns = jnp.asarray([s.turn_idx for s in slots], jnp.int32)
+        return _fold_rows(keys, turns)
+
+    def _absorb(self, session, slot: _Slot, fut, retire, stats
+                ) -> Optional[List[int]]:
+        """A parked row's tool results landed: record the observation on the
+        trajectory and return its token ids for the caller's batched
+        prefill, or retire the slot and return None if the context is full."""
+        try:
+            results: List[ToolResult] = fut.result()
+        except Exception as e:  # executor bug — degrade to error observations
+            results = [ToolResult(c.name, f"ERROR: {type(e).__name__}: {e}",
+                                  ok=False, call_id=c.call_id)
+                       for c in slot.calls]
+        stats["tool_s"] += sum(r.latency_s for r in results)
+        obs_text = self.env.manager.format_observation(results)
+        ids = self.tok.encode(obs_text)
+        max_len = getattr(self.engine, "max_len", None)
+        lengths = np.asarray(session.lengths)
+        if max_len is not None and int(lengths[slot.row]) + len(ids) > max_len:
+            # observation cannot fit at all — retire instead of overflowing
+            # (an observation that fits but leaves no decode room is still
+            # prefilled, matching the reference loop; the next round then
+            # retires the row with counts==0)
+            retire(slot, "max_len", finished=False)
+            return None
+        tr = slot.job.traj
+        tr.append(Role.OBSERVATION, ids)
+        tr.meta["logprobs"].extend([0.0] * len(ids))
+        return ids
+
+    # Engine doubles in tests implement only the coarse session API; fall
+    # back to a full-batch extend with empty rows for them.
+    def _extend_rows(self, session, rows, token_lists) -> None:
+        if hasattr(self.engine, "extend_rows"):
+            self.engine.extend_rows(session, rows, token_lists)
+            return
+        full = [[] for _ in range(session.batch)]
+        for r, t in zip(rows, token_lists):
+            full[int(r)] = list(t)
+        self.engine.extend(session, full)
+        for r in rows:
+            session.stopped[int(r)] = False
+
+    def _reset_rows(self, session, rows) -> None:
+        if hasattr(self.engine, "reset_rows"):
+            self.engine.reset_rows(session, rows)
+            return
+        for r in rows:
+            session.lengths[int(r)] = 0
+            session.stopped[int(r)] = True

@@ -2,7 +2,11 @@
 
 One iteration (paper Fig. 4):
   1. sample tasks; rollout ``group_size`` trajectories per task through the
-     Generate-Parse-Invoke-Update loop (async tool execution);
+     Generate-Parse-Invoke-Update loop — by default the continuous-batching
+     scheduler's trajectory stream (decode overlaps tool I/O; finished rows
+     retire and their slots refill from the task queue), whose
+     slot-occupancy/overlap stats are logged under ``rollout/*`` alongside
+     the per-reason ``stop/*`` episode-termination distribution;
   2. score trajectories with the configured reward composer (rule / judge /
      verify, §2.4.1);
   3. group-normalize advantages (GRPO);
@@ -27,7 +31,7 @@ import numpy as np
 
 from repro.core.grpo import (GRPOConfig, grpo_advantages, make_grpo_train_step,
                              token_logprobs)
-from repro.core.mdp import to_training_batch
+from repro.core.mdp import STOP_REASONS, to_training_batch
 from repro.core.rollout import RolloutConfig, RolloutWorker
 from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.serving.engine import GenerationEngine
@@ -135,6 +139,17 @@ class RLTrainer:
             "throughput_tok_s": n_model_tokens / max(t_roll + t_train, 1e-9),
             **{k: float(v) for k, v in metrics.items()},
         }
+        # episode-termination distribution: over-budget/truncated rows are
+        # now distinguishable from answered ones in the logs
+        for reason in STOP_REASONS:
+            out[f"stop/{reason}"] = float(np.mean(
+                [t.stop_reason == reason for t in trajs]))
+        # continuous-batching scheduler stats (empty in reference mode)
+        sched = getattr(self.worker, "last_stats", None) or {}
+        for k in ("slot_occupancy", "overlap_factor", "tool_wait_s", "gen_s",
+                  "rounds", "refills", "n_slots"):
+            if k in sched:
+                out[f"rollout/{k}"] = float(sched[k])
         self.history.append(out)
         if self.cfg.log_path:
             os.makedirs(os.path.dirname(self.cfg.log_path) or ".",

@@ -14,6 +14,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as ATT
@@ -152,6 +153,43 @@ class Model:
 
     def cache_struct(self, batch: int, max_len: int, window: int = 0):
         return jax.eval_shape(lambda: self.init_cache(batch, max_len, window))
+
+    def reset_cache_rows(self, cache, rows, max_len: int, window: int = 0):
+        """Return ``cache`` with the given batch rows re-initialized.
+
+        The selected lanes go back to their :meth:`init_cache` state
+        (attention pos=-1, SSM conv/state zero) while every other lane is
+        untouched — the continuous-batching slot-refill primitive.  The
+        batch axis sits at a different depth per family (stacked caches are
+        built by broadcasting a per-batch single over layer dims), so the
+        scatter axis is resolved here rather than by generic tree mapping.
+        """
+        c = self.cfg
+        idx = jnp.asarray(np.asarray(rows, np.int32).reshape(-1))
+        fresh = self.init_cache(int(idx.shape[0]), max_len, window)
+        tmap = jax.tree_util.tree_map
+
+        def set_rows(axis):
+            def f(live, new):
+                sl = (slice(None),) * axis + (idx,)
+                return live.at[sl].set(new.astype(live.dtype))
+            return f
+
+        if c.family == "hybrid":
+            return {"stack": {
+                # mamba leaves: (G, attn_every, B, ...); attn leaves: (G, B, ...)
+                "mamba": tmap(set_rows(2), cache["stack"]["mamba"],
+                              fresh["stack"]["mamba"]),
+                "attn": tmap(set_rows(1), cache["stack"]["attn"],
+                             fresh["stack"]["attn"]),
+            }}
+        # dense/moe/vlm/encdec/ssm: "stack" leaves (n_stack, B, ...),
+        # optional "dense" list entries (B, ...)
+        out = {"stack": tmap(set_rows(1), cache["stack"], fresh["stack"])}
+        if "dense" in cache:
+            out["dense"] = [tmap(set_rows(0), cl, fl)
+                            for cl, fl in zip(cache["dense"], fresh["dense"])]
+        return out
 
     # ---------------------------------------------------------- dry-run inputs
     def input_specs(self, shape_name: str, variant: str = "baseline") -> dict:

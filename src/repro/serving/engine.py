@@ -8,6 +8,19 @@ contexts.  Turn structure for multi-turn rollouts:
     engine.extend(session, obs_token_lists)     # prefill tool observations
     ...                                          # next turn reuses the cache
 
+Continuous batching (core/scheduler.py) additionally drives *per-slot*
+session ops so individual rows can be parked, retired and refilled without
+disturbing their neighbours:
+
+    engine.extend_rows(session, rows, lists)    # prefill a subset of rows
+    engine.reset_rows(session, rows)            # clear cache lanes for reuse
+
+and per-row sampling streams: ``generate(..., row_keys=(B,2))`` draws row
+``b``'s tokens from ``fold_in(row_keys[b], step)`` instead of one shared
+key, so a trajectory's samples do not depend on which other rows happen to
+share the decode batch — the property that makes scheduler-vs-reference
+trajectory parity exact.
+
 Ragged rows are right-padded per call; pads carry ``kv_valid=False`` so they
 are stored with pos=-1 (attention) / dt=0 (SSM) and never influence later
 tokens — rollout logprobs therefore match training-time logprobs exactly
@@ -117,7 +130,7 @@ class GenerationEngine:
         self._prefill_jit = jax.jit(self._prefill_impl)
         self._decode_jit = jax.jit(self._decode_impl)
         self._loop_jit = jax.jit(self._decode_loop_impl,
-                                 static_argnames=("T",))
+                                 static_argnames=("T", "per_row"))
 
     # ------------------------------------------------------------- impl fns
     def _prefill_impl(self, params, cache, tokens, positions, valid, cross_kv):
@@ -136,7 +149,8 @@ class GenerationEngine:
         return logits[:, 0, :], new_cache
 
     def _decode_loop_impl(self, params, cache, last_logits, lengths, stopped,
-                          key, n_max, temperature, stop_arr, cross_kv, *, T):
+                          key, row_keys, n_max, temperature, stop_arr,
+                          cross_kv, *, T, per_row):
         """Fused decode turn: a while_loop carrying the cache on device.
 
         ``T`` (static) is the bucketed output-buffer width; ``n_max``
@@ -145,6 +159,11 @@ class GenerationEngine:
         ``last_logits``, records the token + sampling logprob for active
         rows, writes the token into the cache (pads carry kv_valid=False),
         and deactivates rows that emitted a stop id or filled the context.
+
+        ``per_row`` (static) selects the sampling stream: False draws every
+        step from one shared split chain of ``key``; True draws row ``b``'s
+        step ``t`` from ``fold_in(row_keys[b], t)`` so each row's randomness
+        is independent of the batch composition (continuous batching).
         """
         B = last_logits.shape[0]
         pad = jnp.int32(self.pad_id)
@@ -157,8 +176,13 @@ class GenerationEngine:
 
         def body(carry):
             t, key, cache, last_logits, lengths, active, toks, lps, counts = carry
-            key, sub = jax.random.split(key)
-            tok, lp = _sample(last_logits, sub, temperature)
+            if per_row:
+                step_keys = jax.vmap(jax.random.fold_in,
+                                     in_axes=(0, None))(row_keys, t)
+                tok, lp = _sample_rows(last_logits, step_keys, temperature)
+            else:
+                key, sub = jax.random.split(key)
+                tok, lp = _sample(last_logits, sub, temperature)
             tok = tok.astype(jnp.int32)
             accept = active
             toks = toks.at[:, t].set(jnp.where(accept, tok, pad))
@@ -226,6 +250,13 @@ class GenerationEngine:
             toks[i, :len(t)] = t
             valid[i, :len(t)] = True
             pos[i] = session.lengths[i] + np.arange(L)
+        if not self.window:
+            # Right-pad positions can exceed max_len when a row is near the
+            # end of its context (L is bucketed): unclamped they would wrap
+            # modulo the cache width and overwrite the *start* of the row's
+            # lane with pos=-1.  Clamp pads onto the last slot instead (real
+            # positions are < max_len by the overflow check above).
+            pos = np.minimum(pos, self.max_len - 1)
         logits, session.cache = self._prefill_jit(
             self.params, session.cache, jnp.asarray(toks), jnp.asarray(pos),
             jnp.asarray(valid), session.cross_kv)
@@ -237,9 +268,52 @@ class GenerationEngine:
         session.last_logits = jnp.where(has_new, gathered, session.last_logits)
         session.lengths = session.lengths + lens
 
+    def extend_rows(self, session: DecodeSession, rows: Sequence[int],
+                    token_lists: List[List[int]]) -> None:
+        """Prefill tokens into a *subset* of rows and revive them.
+
+        ``token_lists`` aligns with ``rows``; every other row's cache lane,
+        length and ``last_logits`` are untouched (the prefill sees them with
+        zero new tokens).  Used by the continuous-batching scheduler to
+        deliver a tool observation to a parked row, or a fresh prompt to a
+        just-reset slot, while the rest of the batch keeps its state.
+        """
+        full: List[List[int]] = [[] for _ in range(session.batch)]
+        for r, t in zip(rows, token_lists):
+            full[int(r)] = list(t)
+        self.extend(session, full)
+        stopped = np.asarray(session.stopped).copy()
+        stopped[np.asarray(list(rows), np.int64)] = False
+        session.stopped = stopped
+
+    def reset_rows(self, session: DecodeSession, rows: Sequence[int]) -> None:
+        """Return individual cache lanes to their pristine state for reuse.
+
+        The rows' lanes are re-initialized (attention pos=-1 everywhere, SSM
+        conv/state zeroed) so no KV/state from the previous occupant can leak
+        into the next one; lengths go to 0, ``last_logits`` to 0, and the
+        rows are marked ``stopped`` until re-primed via :meth:`extend_rows`.
+        Neighbouring rows are untouched.  (encdec ``cross_kv`` is per-episode
+        and not re-primed here — continuous batching targets decoder-only
+        families.)
+        """
+        idx = np.asarray(list(rows), np.int64)
+        if idx.size == 0:
+            return
+        session.cache = self.model.reset_cache_rows(
+            session.cache, idx, self.max_len, self.window)
+        session.last_logits = session.last_logits.at[jnp.asarray(idx)].set(0.0)
+        lengths = np.asarray(session.lengths).copy()
+        lengths[idx] = 0
+        session.lengths = lengths
+        stopped = np.asarray(session.stopped).copy()
+        stopped[idx] = True
+        session.stopped = stopped
+
     def generate(self, session: DecodeSession, max_new_tokens: int,
-                 key: jax.Array, temperature: Optional[float] = None
-                 ) -> GenerationResult:
+                 key: Optional[jax.Array] = None,
+                 temperature: Optional[float] = None,
+                 row_keys: Optional[jax.Array] = None) -> GenerationResult:
         """Sample per-row continuations until a stop id / budget / max_len.
 
         Runs the fused on-device decode loop; the result (including the stop
@@ -247,7 +321,16 @@ class GenerationEngine:
         :class:`GenerationResult`.  Rows already stopped generate nothing;
         rows that fill the context are marked ``session.stopped`` so later
         turns skip them.
+
+        ``row_keys`` (B, 2) switches sampling to independent per-row streams
+        (row ``b``, step ``t`` draws from ``fold_in(row_keys[b], t)``): a
+        row's tokens then depend only on its own key and context, never on
+        which rows share the batch — required by the continuous-batching
+        scheduler for parity with the turn-synchronous reference.
         """
+        per_row = row_keys is not None
+        if not per_row and key is None:
+            raise ValueError("generate() needs either key or row_keys")
         temp = self.temperature if temperature is None else temperature
         T = _bucket(max_new_tokens)
         stop_arr = jnp.asarray(np.asarray(self.stop_ids, np.int32)
@@ -256,9 +339,11 @@ class GenerationEngine:
             self._loop_jit(
                 self.params, session.cache, session.last_logits,
                 jnp.asarray(session.lengths, jnp.int32),
-                jnp.asarray(session.stopped), key,
+                jnp.asarray(session.stopped),
+                None if per_row else key,
+                jnp.asarray(row_keys) if per_row else None,
                 jnp.int32(min(max_new_tokens, T)), jnp.float32(temp),
-                stop_arr, session.cross_kv, T=T)
+                stop_arr, session.cross_kv, T=T, per_row=per_row)
         session.cache = cache
         session.last_logits = last_logits
         # single host materialization per turn
@@ -273,12 +358,15 @@ class GenerationEngine:
                                 counts=np.asarray(counts))
 
     def generate_reference(self, session: DecodeSession, max_new_tokens: int,
-                           key: jax.Array, temperature: Optional[float] = None
+                           key: Optional[jax.Array] = None,
+                           temperature: Optional[float] = None,
+                           row_keys: Optional[jax.Array] = None
                            ) -> GenerationResult:
         """Per-token Python-loop decoder (the seed implementation).
 
-        Semantically identical to :meth:`generate` — kept as the parity
-        oracle (tests/test_serving.py) and the baseline the decode-throughput
+        Semantically identical to :meth:`generate` (including the per-row
+        ``row_keys`` sampling mode) — kept as the parity oracle
+        (tests/test_serving.py) and the baseline the decode-throughput
         benchmark measures the fused loop against.
         """
         temp = self.temperature if temperature is None else temperature
@@ -287,12 +375,18 @@ class GenerationEngine:
         out_logps: List[List[float]] = [[] for _ in range(B)]
         active = ~session.stopped & (session.lengths < self.max_len - 1)
 
-        for _ in range(max_new_tokens):
+        for step in range(max_new_tokens):
             if not active.any():
                 break
-            key, sub = jax.random.split(key)
-            cur_tok, cur_lp = _sample(session.last_logits, sub,
-                                      jnp.float32(temp))
+            if row_keys is not None:
+                step_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+                    jnp.asarray(row_keys), jnp.int32(step))
+                cur_tok, cur_lp = _sample_rows(session.last_logits, step_keys,
+                                               jnp.float32(temp))
+            else:
+                key, sub = jax.random.split(key)
+                cur_tok, cur_lp = _sample(session.last_logits, sub,
+                                          jnp.float32(temp))
             cur_tok, cur_lp = np.asarray(cur_tok), np.asarray(cur_lp)
             accept = active.copy()
             for i in range(B):
@@ -333,6 +427,28 @@ def _sample(logits: jnp.ndarray, key: jax.Array, temperature) -> tuple:
         scaled = jax.nn.log_softmax(logits / jnp.maximum(temperature, 1e-6),
                                     axis=-1)
         tok = jax.random.categorical(key, scaled, axis=-1)
+        lp = jnp.take_along_axis(scaled, tok[:, None], axis=-1)[:, 0]
+        return tok, lp
+
+    def do_greedy(_):
+        tok = jnp.argmax(logits, axis=-1)
+        return tok, jnp.zeros(logits.shape[:-1], jnp.float32)
+
+    return jax.lax.cond(temperature > 1e-6, do_sample, do_greedy,
+                        operand=None)
+
+
+def _sample_rows(logits: jnp.ndarray, keys: jnp.ndarray, temperature) -> tuple:
+    """Per-row-key variant of :func:`_sample`: row ``b`` draws with its own
+    ``keys[b]``, so the sample is a function of that row's logits and key
+    alone (batch-composition independence for continuous batching).  Same
+    tempered-distribution logprob contract as :func:`_sample`."""
+    temperature = jnp.asarray(temperature, jnp.float32)
+
+    def do_sample(_):
+        scaled = jax.nn.log_softmax(logits / jnp.maximum(temperature, 1e-6),
+                                    axis=-1)
+        tok = jax.vmap(jax.random.categorical)(keys, scaled)
         lp = jnp.take_along_axis(scaled, tok[:, None], axis=-1)[:, 0]
         return tok, lp
 

@@ -1,0 +1,55 @@
+"""Shared persistent asyncio loop on a daemon thread.
+
+Blocking tool APIs (``ToolRegistry.call_sync``, the executors'
+``execute_batch``) must be callable from synchronous code that is itself
+running *inside* an event loop (the webui/serving path drives rollouts from
+async handlers); ``asyncio.run`` would raise "event loop already running"
+there.  Coroutines are instead submitted to this loop and the calling thread
+blocks on the future.  The continuous-batching rollout scheduler also uses
+this loop as the place where in-flight tool calls make progress while the
+decode batch keeps generating (core/scheduler.py).
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+from typing import Optional
+
+
+class BackgroundLoop:
+    """A daemon thread running a persistent asyncio loop."""
+
+    _lock = threading.Lock()
+    _shared: Optional["BackgroundLoop"] = None
+
+    def __init__(self):
+        self.loop = asyncio.new_event_loop()
+        self.thread = threading.Thread(target=self.loop.run_forever,
+                                       name="tool-executor-loop", daemon=True)
+        self.thread.start()
+
+    @classmethod
+    def shared(cls) -> "BackgroundLoop":
+        with cls._lock:
+            if cls._shared is None or not cls._shared.thread.is_alive():
+                cls._shared = cls()
+            return cls._shared
+
+    def submit(self, coro) -> "asyncio.Future":
+        """Schedule ``coro`` on the loop; returns a concurrent Future."""
+        return asyncio.run_coroutine_threadsafe(coro, self.loop)
+
+    def run(self, coro):
+        """Run ``coro`` on the loop and block the calling thread on it."""
+        try:
+            current = asyncio.get_running_loop()
+        except RuntimeError:
+            current = None
+        if current is self.loop:
+            # re-entered from our own thread (a tool calling a blocking tool
+            # API): blocking here would deadlock the loop — fail fast instead
+            coro.close()
+            raise RuntimeError(
+                "blocking tool call from the tool-executor loop itself; "
+                "await the async variant instead")
+        return self.submit(coro).result()

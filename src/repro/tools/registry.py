@@ -131,18 +131,12 @@ class ToolRegistry:
                               call_id=call.call_id)
 
     def call_sync(self, call: ToolCall) -> ToolResult:
-        t0 = time.monotonic()
-        try:
-            spec = self.get(call.name)
-            args = spec.validate_args(call.arguments)
-            if inspect.iscoroutinefunction(spec.fn):
-                content = asyncio.run(spec.fn(**args))
-            else:
-                content = spec.fn(**args)
-            return ToolResult(call.name, str(content), ok=True,
-                              latency_s=time.monotonic() - t0,
-                              call_id=call.call_id)
-        except Exception as e:
-            return ToolResult(call.name, f"ERROR: {type(e).__name__}: {e}",
-                              ok=False, latency_s=time.monotonic() - t0,
-                              call_id=call.call_id)
+        """Blocking single-call execution with ``spec.timeout_s`` enforced.
+
+        Routed through the shared background loop so sync and async tool fns
+        go through the same ``asyncio.wait_for`` timeout path as
+        :meth:`call_async` (the old direct call had no timeout on either),
+        and so it is safe to call from code already inside an event loop.
+        """
+        from repro.tools.background import BackgroundLoop
+        return BackgroundLoop.shared().run(self.call_async(call))

@@ -111,3 +111,113 @@ def test_empty_rows():
     reg = _latency_registry()
     out = AsyncToolExecutor(reg).execute_batch([[], [ToolCall("slow", {"x": 1}, 0)], []])
     assert out[0] == [] and out[2] == [] and out[1][0].ok
+
+
+# ------------------------------------------------- call_sync timeout (satellite)
+def test_call_sync_timeout_enforced_for_sync_fn():
+    """Regression: call_sync used to call a plain sync fn directly, ignoring
+    spec.timeout_s entirely — a hung tool blocked the rollout forever."""
+    reg = ToolRegistry()
+
+    def block(x):
+        time.sleep(2.0)
+        return "late"
+
+    reg.register(ToolSpec(name="block", fn=block, timeout_s=0.1,
+                          parameters={"x": {"required": True}}))
+    t0 = time.monotonic()
+    r = reg.call_sync(ToolCall("block", {"x": 1}, 0))
+    assert time.monotonic() - t0 < 1.5
+    assert not r.ok and "TimeoutError" in r.content
+
+
+def test_call_sync_timeout_enforced_for_async_fn():
+    """Regression: call_sync ran coroutine tools via asyncio.run with no
+    wait_for wrapper, so spec.timeout_s was ignored on that path too."""
+    reg = _latency_registry()
+    t0 = time.monotonic()
+    r = reg.call_sync(ToolCall("very_slow", {"x": 0}, 0))  # timeout_s=0.1
+    assert time.monotonic() - t0 < 1.5
+    assert not r.ok and "TimeoutError" in r.content
+
+
+def test_call_sync_works_inside_running_loop():
+    """call_sync routes through the shared background loop, so driving it
+    from sync code inside an event loop must not crash."""
+    reg = _latency_registry(0.01)
+
+    async def driver():
+        return reg.call_sync(ToolCall("slow", {"x": 7}, 0))
+
+    r = asyncio.run(driver())
+    assert r.ok and r.content == "ok:7"
+
+
+# ------------------------------- serial executor in a running loop (satellite)
+def test_serial_executor_coroutine_tools_inside_running_loop():
+    """Regression: SerialToolExecutor.execute_batch crashed with "event loop
+    already running" (surfacing as ERROR results) when a registered tool is
+    a coroutine and the executor is driven from async serving code — the
+    same bug class fixed for AsyncToolExecutor."""
+    reg = _latency_registry(0.01)
+    sx = SerialToolExecutor(reg)
+    batch = [[ToolCall("slow", {"x": i}, 0)] for i in range(3)]
+
+    async def driver():
+        return sx.execute_batch(batch)
+
+    out = asyncio.run(driver())
+    assert all(r[0].ok for r in out), [r[0].content for r in out]
+    assert [r[0].content for r in out] == [f"ok:{i}" for i in range(3)]
+    # and still fine from plain sync context afterwards
+    out2 = sx.execute_batch(batch)
+    assert all(r[0].ok for r in out2)
+
+
+# -------------------------------------- futures API for the scheduler (tentpole)
+def test_submit_drain_ready_wait_ready():
+    reg = _latency_registry(0.05)
+    ax = AsyncToolExecutor(reg)
+    fast = ax.submit([ToolCall("slow", {"x": "f"}, 0)])
+    slow = ax.submit([ToolCall("slow", {"x": "s0"}, 0),
+                      ToolCall("slow", {"x": "s1"}, 1)])
+    assert ax.n_inflight == 2
+    done = ax.wait_ready()           # blocks for the first completion
+    assert done
+    for _ in range(200):
+        done += ax.drain_ready()     # non-blocking poll for the rest
+        if ax.n_inflight == 0:
+            break
+        time.sleep(0.005)
+    assert ax.n_inflight == 0 and len(done) == 2
+    assert fast.result()[0].content == "ok:f"
+    # within a row, results are ordered by call_id
+    assert [r.content for r in slow.result()] == ["ok:s0", "ok:s1"]
+    assert ax.stats["calls"] == 3
+
+
+def test_drain_ready_scoped_to_owned_futures():
+    """Two consumers sharing one executor must not steal each other's
+    completions when they scope their drains."""
+    reg = _latency_registry(0.02)
+    ax = AsyncToolExecutor(reg)
+    mine = {ax.submit([ToolCall("slow", {"x": "a"}, 0)])}
+    theirs = {ax.submit([ToolCall("slow", {"x": "b"}, 0)])}
+    got = ax.wait_ready(futures=mine)
+    assert got == list(mine)
+    # the other consumer's future is still in flight or drainable by them
+    assert ax.n_inflight == 1
+    assert ax.wait_ready(futures=theirs) == list(theirs)
+    assert ax.n_inflight == 0
+
+
+def test_submit_error_isolation_and_timeout():
+    reg = _latency_registry(0.01)
+    ax = AsyncToolExecutor(reg)
+    fut = ax.submit([ToolCall("failing", {"x": 1}, 0),
+                     ToolCall("slow", {"x": 2}, 1),
+                     ToolCall("very_slow", {"x": 3}, 2)])
+    res = fut.result(timeout=5)
+    assert not res[0].ok and "boom" in res[0].content
+    assert res[1].ok
+    assert not res[2].ok and "TimeoutError" in res[2].content

@@ -67,7 +67,8 @@ def test_full_rollout_with_scripted_policy(env):
                                  last_logits=None,
                                  stopped=np.zeros(len(contexts), bool))
 
-        def generate(self, session, n, key, temperature=None):
+        def generate(self, session, n, key=None, temperature=None,
+                     row_keys=None):
             import numpy as np
             from repro.serving.engine import GenerationResult
             texts = [f"<tool_call>calculate: {expr}</tool_call>",

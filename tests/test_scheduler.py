@@ -1,0 +1,200 @@
+"""Continuous-batching scheduler: stream API, facade fallback, trainer
+metrics (slot occupancy / overlap / stop_reason distribution)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.async_engine import AsyncToolExecutor, SerialToolExecutor
+from repro.core.rollout import RolloutConfig, RolloutWorker
+from repro.data.tokenizer import default_tokenizer
+from repro.models import Model
+from repro.serving.engine import GenerationEngine
+from repro.tools.search_env import SearchEnv
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = default_tokenizer(cfg.vocab_size)
+    env = SearchEnv(n_entities=30, seed=0)
+    return cfg, model, params, tok, env
+
+
+def _worker(setup, executor=None, **kw):
+    cfg, model, params, tok, env = setup
+    engine = GenerationEngine(model, params, pad_id=tok.pad_id,
+                              stop_ids=(tok.eos_id,), max_len=512)
+    defaults = dict(max_turns=2, max_new_tokens=8, group_size=1)
+    defaults.update(kw)
+    return RolloutWorker(engine, env, tok, RolloutConfig(**defaults),
+                         executor=executor)
+
+
+def test_stream_yields_all_trajectories_with_stats(setup):
+    cfg, model, params, tok, env = setup
+    worker = _worker(setup, n_slots=2, group_size=2)
+    tasks = env.sample_tasks(2, seed=1)
+    seen = list(worker.rollout_stream(tasks, jax.random.PRNGKey(0)))
+    assert len(seen) == 4
+    assert sorted(t.group_id for t in seen) == [0, 0, 1, 1]
+    assert all(t.stop_reason for t in seen)
+    stats = worker.last_stats
+    assert stats["n_trajectories"] == 4 and stats["n_slots"] == 2
+    assert 0.0 < stats["slot_occupancy"] <= 1.0
+    assert stats["rounds"] >= 2      # 2 slots cannot finish 4 rows in one
+
+
+def test_run_returns_task_group_order(setup):
+    cfg, model, params, tok, env = setup
+    worker = _worker(setup, n_slots=3, group_size=2)
+    tasks = env.sample_tasks(3, seed=2)
+    trajs = worker.rollout(tasks, jax.random.PRNGKey(0))
+    assert [t.group_id for t in trajs] == [0, 0, 1, 1, 2, 2]
+    assert all("job_index" not in t.meta for t in trajs)
+
+
+def test_facade_falls_back_without_futures_executor(setup):
+    """SerialToolExecutor has no submit(): the worker must transparently use
+    the turn-synchronous reference loop instead of crashing."""
+    cfg, model, params, tok, env = setup
+    worker = _worker(setup, executor=SerialToolExecutor(env.registry))
+    trajs = worker.rollout(env.sample_tasks(1, seed=3),
+                           jax.random.PRNGKey(1))
+    assert len(trajs) == 1 and trajs[0].stop_reason
+
+
+def test_empty_task_list(setup):
+    worker = _worker(setup)
+    assert worker.rollout([], jax.random.PRNGKey(0)) == []
+
+
+def test_mid_round_absorption_keeps_rows_in_parse_set(setup):
+    """Regression: when a parked row's future lands while other rows are
+    still decoding, the revived row joins the very next decode round — the
+    parse set must be re-derived after absorption, or the engine decodes the
+    row and its tokens are silently dropped (turn desync).  Scripts with a
+    decode sleep + heterogeneous latencies force that interleaving; whatever
+    the timing, every trajectory must replay its script exactly."""
+    import re as _re
+    import time as _time
+    from repro.serving.engine import DecodeSession, GenerationResult
+    from repro.tools.envs import Env as BaseEnv
+    from repro.tools.manager import Qwen3ToolManager
+    from repro.tools.registry import ToolRegistry, ToolSpec
+    cfg, model, params, tok, env = setup
+
+    reg = ToolRegistry()
+
+    async def sleep(ms):
+        import asyncio
+        await asyncio.sleep(float(ms) / 1000.0)
+        return f"ok:{ms}"
+
+    reg.register(ToolSpec(name="sleep", fn=sleep,
+                          parameters={"ms": {"required": True}}))
+    slow_env = BaseEnv(reg, Qwen3ToolManager(reg, compact=True),
+                       max_tool_calls=8)
+
+    # task 0 parks on a 60ms call; a chain of instant tasks keeps the other
+    # slot ACTIVE through every round, so task 0's future lands mid-round and
+    # is absorbed on the drain_ready (active-rows) path.  If the revived row
+    # misses that round's parse set, the engine still advances its script and
+    # the dropped turn surfaces as the WRONG answer in the trajectory.
+    scripts = {0: ["<tool_call>sleep: 60</tool_call>", "<answer>t0</answer>",
+                   "<answer>WRONG</answer>"]}
+    for t in range(1, 9):
+        scripts[t] = [f"<answer>t{t}</answer>"]
+    task_re = _re.compile(r"task-(\d+)")
+
+    class Eng:
+        stop_ids = ()
+
+        def __init__(self):
+            self.task = []
+            self.turn = []
+            self.fresh = set()      # rows reset and awaiting a new prompt
+
+        def _tid(self, toks):
+            return int(task_re.search(tok.decode(list(toks))).group(1))
+
+        def start(self, contexts):
+            self.task = [self._tid(c) for c in contexts]
+            self.turn = [0] * len(contexts)
+            return DecodeSession(
+                cache=None,
+                lengths=np.array([len(c) for c in contexts]),
+                last_logits=None,
+                stopped=np.zeros(len(contexts), bool))
+
+        def generate(self, session, n, key=None, temperature=None,
+                     row_keys=None):
+            _time.sleep(0.015)       # decode cost: rows decode while I/O flies
+            toks = []
+            for i in range(session.batch):
+                if session.stopped[i]:
+                    toks.append([])
+                    continue
+                s = scripts[self.task[i]]
+                toks.append(tok.encode(s[min(self.turn[i], len(s) - 1)]))
+                self.turn[i] += 1
+            lps = [np.full(len(t), -1.0, np.float32) for t in toks]
+            return GenerationResult.from_lists(toks, lps, pad_id=tok.pad_id)
+
+        def extend(self, session, lists):
+            pass
+
+        def extend_rows(self, session, rows, lists):
+            for r, t in zip(rows, lists):
+                r = int(r)
+                session.stopped[r] = False
+                if r in self.fresh:          # new occupant's prompt
+                    self.task[r] = self._tid(t)
+                    self.turn[r] = 0
+                    self.fresh.discard(r)
+
+        def reset_rows(self, session, rows):
+            for r in rows:
+                session.stopped[int(r)] = True
+                self.fresh.add(int(r))
+
+    worker = RolloutWorker(
+        Eng(), slow_env, tok,
+        RolloutConfig(max_turns=6, group_size=1, mode="continuous",
+                      n_slots=2))
+    tasks = [(f"task-{t}", f"t{t}") for t in range(9)]
+    trajs = worker.rollout(tasks, jax.random.PRNGKey(0))
+    t0 = trajs[0]
+    assert tok.decode(t0.model_tokens()) == "".join(scripts[0][:2]), \
+        tok.decode(t0.model_tokens())
+    assert t0.finished and t0.stop_reason == "answer" and t0.n_tool_calls == 1
+    for t in range(1, 9):
+        assert tok.decode(trajs[t].model_tokens()) == scripts[t][0]
+        assert trajs[t].finished
+
+
+@pytest.mark.slow
+def test_trainer_logs_stop_reasons_and_scheduler_stats(setup):
+    from repro.core.grpo import GRPOConfig
+    from repro.core.rewards import RewardComposer, RuleReward
+    from repro.core.trainer import RLTrainer, TrainerConfig
+    from repro.optim.adamw import AdamWConfig
+    cfg, model, params, tok, env = setup
+    trainer = RLTrainer(
+        model, params, env, tok,
+        RewardComposer([(RuleReward(env), 1.0)]),
+        TrainerConfig(n_tasks_per_iter=2, group_size=2, max_seq_len=256),
+        RolloutConfig(max_turns=2, max_new_tokens=8, group_size=2),
+        GRPOConfig(), AdamWConfig())
+    out = trainer.train_iteration(jax.random.PRNGKey(0))
+    for reason in ("answer", "no_call", "tool_budget", "max_len",
+                   "max_turns"):
+        assert f"stop/{reason}" in out
+    assert abs(sum(out[f"stop/{r}"] for r in
+                   ("answer", "no_call", "tool_budget", "max_len",
+                    "max_turns")) - 1.0) < 1e-6
+    assert "rollout/slot_occupancy" in out
+    assert "rollout/overlap_factor" in out
+    assert 0.0 < out["rollout/slot_occupancy"] <= 1.0

@@ -185,3 +185,95 @@ def test_generation_result_roundtrip(engine_setup):
     toks, lps = res    # tuple-unpack compatibility
     assert toks == [[1, 2, 3], [], [7]]
     assert [len(x) for x in lps] == [3, 0, 1]
+
+
+def test_generation_result_zero_batch_and_zero_tokens():
+    """Edge cases the continuous scheduler can produce: an empty batch, and
+    batches where no row generated anything."""
+    from repro.serving.engine import GenerationResult
+    empty = GenerationResult.from_lists([], [])
+    assert empty.batch == 0
+    assert empty.tokens.shape == (0, 0)
+    assert empty.token_lists() == [] and empty.logprob_lists() == []
+    toks, lps = empty
+    assert toks == [] and lps == []
+
+    no_tok = GenerationResult.from_lists([[], []], [[], []], pad_id=5)
+    assert no_tok.batch == 2
+    assert no_tok.tokens.shape == (2, 0)
+    assert no_tok.counts.tolist() == [0, 0]
+    assert no_tok.token_lists() == [[], []]
+
+
+def test_per_row_keys_fused_matches_reference(engine_setup):
+    """row_keys mode: fused while_loop == per-token Python loop, token- and
+    logprob-identical."""
+    cfg, model, params, tok = engine_setup
+    eng = GenerationEngine(model, params, pad_id=tok.pad_id,
+                           stop_ids=(tok.eos_id,), max_len=96,
+                           temperature=1.0)
+    ctx = [tok.encode("pariry a"), tok.encode("b"), tok.encode("row three !")]
+    rk = jax.random.split(jax.random.PRNGKey(5), 3)
+    s1 = eng.start([list(c) for c in ctx])
+    t1, l1 = eng.generate(s1, 12, row_keys=rk)
+    s2 = eng.start([list(c) for c in ctx])
+    t2, l2 = eng.generate_reference(s2, 12, row_keys=rk)
+    assert t1 == t2
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_per_row_keys_batch_composition_independent(engine_setup):
+    """A row's samples depend only on its own key and context — never on
+    which rows share the decode batch (the property the continuous
+    scheduler's parity rests on)."""
+    cfg, model, params, tok = engine_setup
+    eng = GenerationEngine(model, params, pad_id=tok.pad_id,
+                           stop_ids=(tok.eos_id,), max_len=96,
+                           temperature=1.0)
+    ctx = [tok.encode("same row"), tok.encode("a different neighbour")]
+    rk = jax.random.split(jax.random.PRNGKey(3), 2)
+    s_joint = eng.start([list(c) for c in ctx])
+    joint, jl = eng.generate(s_joint, 10, row_keys=rk)
+    s_solo = eng.start([list(ctx[0])])
+    solo, sl = eng.generate(s_solo, 10, row_keys=rk[:1])
+    assert joint[0] == solo[0]
+    np.testing.assert_allclose(jl[0], sl[0], atol=1e-5)
+
+
+def test_reset_rows_clears_lane_without_disturbing_neighbors(engine_setup):
+    """Slot refill: a reset+re-primed lane behaves exactly like a fresh
+    session (no KV leakage from the previous occupant), and the neighbouring
+    row's continuation is untouched by the reset."""
+    cfg, model, params, tok = engine_setup
+    eng = GenerationEngine(model, params, pad_id=tok.pad_id,
+                           stop_ids=(tok.eos_id,), max_len=96,
+                           temperature=1.0)
+    first = tok.encode("first occupant with some history")
+    neigh = tok.encode("neighbour row")
+    second = tok.encode("second occupant")
+    rk1 = jax.random.split(jax.random.PRNGKey(3), 2)
+    rk2 = jax.random.split(jax.random.PRNGKey(9), 2)
+
+    # session A: occupy row 0, retire it, refill with `second`
+    sA = eng.start([list(first), list(neigh)])
+    eng.generate(sA, 8, row_keys=rk1)
+    neigh_len = int(sA.lengths[1])
+    eng.reset_rows(sA, [0])
+    assert sA.lengths[0] == 0 and sA.stopped[0]
+    assert sA.lengths[1] == neigh_len and not sA.stopped[1]
+    eng.extend_rows(sA, [0], [list(second)])
+    assert not sA.stopped[0]
+    tA, lA = eng.generate(sA, 8, row_keys=rk2)
+
+    # session B: `second` starts fresh in row 0 (same batch shape)
+    sB = eng.start([list(second), tok.encode("x")])
+    tB, lB = eng.generate(sB, 8, row_keys=rk2)
+    assert tA[0] == tB[0]
+    np.testing.assert_allclose(lA[0], lB[0], atol=1e-5)
+
+    # and the neighbour decodes as if the reset never happened
+    sC = eng.start([list(first), list(neigh)])
+    eng.generate(sC, 8, row_keys=rk1)
+    tC, _ = eng.generate(sC, 8, row_keys=rk2)
+    assert tA[1] == tC[1]
