@@ -18,6 +18,11 @@ from repro.core.mdp import Trajectory
 
 class RewardFn:
     name = "reward"
+    # Streaming-safe rewards can score one trajectory at a time, the moment
+    # it retires from the continuous scheduler, without contending for the
+    # rollout engine (rule functions yes; judge models need a decode batch
+    # of their own, so they score after the rollout instead).
+    streaming_safe = False
 
     def __call__(self, trajs: List[Trajectory], ground_truths: Sequence) -> np.ndarray:
         raise NotImplementedError
@@ -26,6 +31,7 @@ class RewardFn:
 class RuleReward(RewardFn):
     """Eq. 1 — weighted rule components, delegated to Env.compute_score."""
     name = "rule"
+    streaming_safe = True
 
     def __init__(self, env):
         self.env = env
@@ -51,6 +57,8 @@ class ModelJudgeReward(RewardFn):
     name = "judge"
     SCORE_RE = re.compile(r"(?:score|rating)\s*[:=]?\s*([0-9]+(?:\.[0-9]+)?)",
                           re.I)
+    LEAD_RE = re.compile(r"\s*(?:(?:score|rating)\s*[:=]?\s*)?"
+                         r"([0-9]+(?:\.[0-9]+)?)\s*(?:/\s*10)?", re.I)
 
     def __init__(self, judge_engine, tokenizer, criterion: Optional[str] = None,
                  max_judge_tokens: int = 32, seed: int = 0):
@@ -67,7 +75,20 @@ class ModelJudgeReward(RewardFn):
                 f"Conversation:\n{convo}\nScore:")
 
     def extract_score(self, text: str) -> float:
-        m = self.SCORE_RE.search("score:" + text)
+        """Parse the judge's score from its continuation of "... Score:".
+
+        Anchored parse: a number at the *start* of the continuation IS the
+        score by construction — the judge is completing the prompt's
+        trailing "Score:" — and wins; otherwise an explicit
+        "Score:/Rating: N" restatement anywhere in the text is used.  A
+        free-floating number that is neither ("mentions 1995 and 42") must
+        not parse.  The old implementation prepended "score:" and *searched*
+        the result, so with whitespace/colon noise between, any stray number
+        mid-text could score.
+        """
+        m = self.LEAD_RE.match(text)
+        if m is None:
+            m = self.SCORE_RE.search(text)
         if not m:
             return 0.0
         return float(np.clip(float(m.group(1)) / 10.0, 0.0, 1.0))
@@ -116,6 +137,23 @@ class ToolVerifyReward(RewardFn):
 class RewardComposer:
     """Weighted combination of the three paradigms."""
     fns: List[tuple]               # (RewardFn, weight)
+
+    @property
+    def streaming_safe(self) -> bool:
+        """True when every component can score single trajectories as they
+        retire from the rollout stream (rule-only composers)."""
+        return all(getattr(fn, "streaming_safe", False) for fn, _ in self.fns)
+
+    def score_one(self, traj: Trajectory, ground_truth) -> float:
+        """Score one retired trajectory immediately (pipelined rewards):
+        called off the trajectory stream while other rows still decode and
+        tool futures are in flight, so scoring overlaps the rollout instead
+        of forming a terminal phase."""
+        total = 0.0
+        for fn, w in self.fns:
+            total += w * float(fn([traj], [ground_truth])[0])
+        traj.reward = float(total)
+        return traj.reward
 
     def __call__(self, trajs: List[Trajectory], ground_truths) -> np.ndarray:
         total = np.zeros((len(trajs),), np.float32)

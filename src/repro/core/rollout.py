@@ -50,6 +50,10 @@ class RolloutConfig:
     seed: int = 0
     mode: str = "continuous"       # "continuous" | "reference"
     n_slots: int = 0               # decode-batch slots; 0 => one per traj
+    adaptive_budget: bool = True   # shrink per-round decode budget while
+    #                                slots are parked on tool futures (turns
+    #                                then span rounds; sampled tokens are
+    #                                unchanged — see core/scheduler.py)
 
 
 class RolloutWorker:

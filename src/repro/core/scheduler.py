@@ -37,18 +37,41 @@ park / retire / refill state machine (one slot = one cache lane)::
   task from the queue, keeping the decode batch full for arbitrarily many
   tasks with a bounded memory footprint.
 
+Decode rounds are decoupled from logical turns.  A *turn* (sample until a
+stop id or ``max_new_tokens``) may span several *rounds*: when a fraction of
+the slots is parked on tool futures, the per-round token budget shrinks
+(``adaptive_budget``) so the scheduler returns to the drain point sooner and
+observations land earlier, instead of decoding a full turn's worth for the
+few active rows while results queue up.  Mid-turn rows carry their sampled
+prefix in the slot's turn buffer and resume on the next round; the engine's
+``step_offsets`` keep each row's sampling stream indexed by its position
+*within the turn*, so how a turn is sliced into rounds cannot change any
+sampled token.
+
+Paged KV cache (``engine.cache_mode="paged"``): admission is gated on
+*free-block availability* rather than free-slot count —
+``engine.admission_headroom`` reserves worst-case decode growth for every
+occupied row, and a queued task enters only if its prompt + one turn fits
+beyond that reserve (zero-free-blocks => the task simply waits).  Tool
+observations that cannot get blocks stay pending on their parked slot until
+a retirement frees some; if the pool wedges (nothing active, nothing
+absorbable), the longest pending row is retired as ``max_len`` — the
+eviction analogue of vLLM preemption.  Mean pool utilization is reported as
+``cache_utilization``.
+
 Determinism: each trajectory owns a PRNG stream (``split(key, n_trajs)``);
 its k-th decode turn samples from ``fold_in(traj_key, k)`` folded again per
 step inside the engine.  Sampling is therefore independent of which rows
-share a decode round, so with instant tools the scheduler reproduces
-``rollout_reference`` trajectories token-for-token (the parity oracle in
-tests/test_rollout_and_rewards.py).
+share a decode round — and of how turns are sliced into rounds — so with
+instant tools the scheduler reproduces ``rollout_reference`` trajectories
+token-for-token (the parity oracle in tests/test_rollout_and_rewards.py).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import enum
+import inspect
 import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -58,6 +81,18 @@ import numpy as np
 
 from repro.core.mdp import Role, Trajectory
 from repro.tools.registry import ToolResult
+
+MIN_ROUND_BUDGET = 8        # adaptive floor: never shrink a round below this
+
+
+def order_by_job_index(trajs: List[Trajectory]) -> List[Trajectory]:
+    """Restore task x group order on a completion-ordered trajectory list
+    (the contract between ``stream`` and batch consumers): sort by the
+    ``job_index`` the scheduler stamped into ``meta``, then strip it."""
+    trajs.sort(key=lambda t: t.meta.get("job_index", 0))
+    for tr in trajs:
+        tr.meta.pop("job_index", None)
+    return trajs
 
 
 # jitted once at module scope: folding the per-trajectory streams with their
@@ -91,6 +126,10 @@ class _Slot:
     turn_idx: int = 0               # decode turns taken by the occupant
     future: object = None           # executor future while PARKED
     calls: list = dataclasses.field(default_factory=list)
+    turn_toks: list = dataclasses.field(default_factory=list)   # mid-turn buf
+    turn_lps: list = dataclasses.field(default_factory=list)
+    pending_obs: Optional[list] = None   # landed obs waiting for cache blocks
+    lane_clean: bool = True         # cache lane reset since the last occupant
 
 
 class ContinuousScheduler:
@@ -107,17 +146,22 @@ class ContinuousScheduler:
         self.executor = executor
         self.n_slots = n_slots or getattr(config, "n_slots", 0)
         self.last_stats: Dict[str, float] = {}
+        # Engine doubles in tests expose the pre-round generate signature;
+        # round-sliced turns (adaptive budgets, step_offsets) need the real
+        # engine's controls, so detect support once.
+        try:
+            params = inspect.signature(engine.generate).parameters
+            self._supports_rounds = "step_offsets" in params
+        except (TypeError, ValueError):
+            self._supports_rounds = False
 
     # ------------------------------------------------------------------ API
     def run(self, tasks: Sequence[Tuple[str, object]], key: jax.Array,
             group_size: Optional[int] = None) -> List[Trajectory]:
         """Roll every task out; returns trajectories in task x group order
         (the same order the turn-synchronous reference produces)."""
-        out = list(self.stream(tasks, key, group_size=group_size))
-        out.sort(key=lambda t: t.meta["job_index"])
-        for tr in out:
-            tr.meta.pop("job_index", None)
-        return out
+        return order_by_job_index(
+            list(self.stream(tasks, key, group_size=group_size)))
 
     def stream(self, tasks: Sequence[Tuple[str, object]], key: jax.Array,
                group_size: Optional[int] = None) -> Iterator[Trajectory]:
@@ -132,6 +176,7 @@ class ContinuousScheduler:
             return
         queue = collections.deque(jobs)
         B = max(1, min(self.n_slots or n_jobs, n_jobs))
+        B = max(1, min(B, self._initial_admissible(jobs[:B])))
         slots = [_Slot(row=i) for i in range(B)]
 
         first = [queue.popleft() for _ in range(B)]
@@ -143,36 +188,76 @@ class ContinuousScheduler:
         by_future: Dict[object, _Slot] = {}
         stats = {"rounds": 0.0, "gen_s": 0.0, "tool_wait_s": 0.0,
                  "tool_s": 0.0, "refills": 0.0, "active_slot_rounds": 0.0,
-                 "slot_rounds": 0.0, "model_tokens": 0.0}
+                 "slot_rounds": 0.0, "model_tokens": 0.0,
+                 "min_round_budget": float(self.config.max_new_tokens),
+                 "adaptive_rounds": 0.0, "admission_deferrals": 0.0,
+                 "starved_rounds": 0.0, "evictions": 0.0,
+                 "util_sum": 0.0, "util_rounds": 0.0, "util_peak": 0.0}
         t_start = time.monotonic()
         retired: List[Trajectory] = []
         to_refill: List[_Slot] = []
 
         def retire(slot: _Slot, reason: str, finished: bool) -> None:
-            slot.job.traj.stop_reason = reason
-            slot.job.traj.finished = finished
-            retired.append(slot.job.traj)
+            tr = slot.job.traj
+            if slot.turn_toks:          # flush a partial mid-turn buffer
+                tr.append(Role.MODEL, slot.turn_toks)
+                tr.meta["logprobs"].extend(slot.turn_lps)
+                stats["model_tokens"] += len(slot.turn_toks)
+            tr.stop_reason = reason
+            tr.finished = finished
+            retired.append(tr)
             slot.future, slot.calls = None, []
+            slot.turn_toks, slot.turn_lps, slot.pending_obs = [], [], None
             slot.job, slot.state = None, SlotState.FREE
+            slot.lane_clean = False
             session.stopped[slot.row] = True
-            if queue:
-                to_refill.append(slot)
+            to_refill.append(slot)
 
-        def refill() -> None:
+        def refill() -> int:
             """Hand every just-freed slot the next queued task in ONE batched
-            reset + prefill (GRPO group members tend to retire together)."""
+            reset + prefill (GRPO group members tend to retire together).
+
+            Freed lanes are reset *first* — in paged mode that returns their
+            blocks to the pool, and it must happen even with an empty queue
+            so a dead lane can never pin blocks a live parked row is waiting
+            for.  Queued tasks are then admitted against the free-block
+            headroom minus what this very batch has already claimed (several
+            admissions must not jointly over-commit the pool); a task that
+            doesn't fit waits in the queue (zero-free-blocks backpressure).
+            If nothing is running at all, one task is force-admitted
+            regardless so an oversized prompt surfaces as an engine error
+            instead of a silent wedge."""
+            if not to_refill:
+                return 0
+            dirty = [s for s in to_refill if not s.lane_clean]
+            if dirty:
+                self._reset_rows(session, [s.row for s in dirty])
+                for s in dirty:
+                    s.lane_clean = True
+            if not queue:
+                return 0
             rows, prompts = [], []
+            claimed = 0
             while to_refill and queue:
+                need = self._admission_blocks(len(queue[0].prompt_ids))
+                admit_ok = self._can_admit(session, need, claimed)
+                if not admit_ok:
+                    if rows or any(s.job is not None for s in slots):
+                        stats["admission_deferrals"] += 1
+                        break
                 slot, job = to_refill.pop(), queue.popleft()
                 slot.job, slot.key, slot.state = job, job.key, SlotState.ACTIVE
                 slot.turn_idx = 0
+                slot.lane_clean = False
+                claimed += need
                 rows.append(slot.row)
                 prompts.append(job.prompt_ids)
-            to_refill.clear()
+                if not admit_ok:
+                    break               # force-admitted exactly one
             if rows:
-                self._reset_rows(session, rows)
                 self._extend_rows(session, rows, prompts)
                 stats["refills"] += len(rows)
+            return len(rows)
 
         try:
             yield from self._schedule(session, slots, queue, by_future,
@@ -196,16 +281,27 @@ class ContinuousScheduler:
                 "overlap_factor": stats["tool_s"] / max(wall, 1e-9),
                 "n_slots": float(B),
                 "n_trajectories": float(n_jobs),
+                "min_round_budget": stats["min_round_budget"],
+                "adaptive_rounds": stats["adaptive_rounds"],
+                "admission_deferrals": stats["admission_deferrals"],
+                "starved_rounds": stats["starved_rounds"],
+                "evictions": stats["evictions"],
             }
+            if stats["util_rounds"]:
+                self.last_stats["cache_utilization"] = (
+                    stats["util_sum"] / stats["util_rounds"])
+                self.last_stats["cache_utilization_peak"] = stats["util_peak"]
 
     def _schedule(self, session, slots, queue, by_future, stats, retired,
                   retire, refill) -> Iterator[Trajectory]:
         """The park/retire/refill loop proper (see module docstring)."""
+        turn_budget = self.config.max_new_tokens
+        no_progress = 0
         while True:
             for tr in retired:
                 yield tr
             retired.clear()
-            refill()
+            progress = refill() > 0
             parked = [s for s in slots if s.state is SlotState.PARKED]
             active = [s for s in slots if s.state is SlotState.ACTIVE]
             if not parked and not active:
@@ -215,23 +311,43 @@ class ContinuousScheduler:
                 # block for the first completion only when nothing can decode.
                 # The drain is scoped to our own futures so several consumers
                 # can share one executor.
-                if active:
-                    ready = self.executor.drain_ready(by_future)
-                else:
-                    t0 = time.monotonic()
-                    ready = self.executor.wait_ready(futures=by_future)
-                    stats["tool_wait_s"] += time.monotonic() - t0
+                if by_future:
+                    if active:
+                        ready = self.executor.drain_ready(by_future)
+                    else:
+                        t0 = time.monotonic()
+                        ready = self.executor.wait_ready(futures=by_future)
+                        stats["tool_wait_s"] += time.monotonic() - t0
+                    for fut in ready:
+                        slot = by_future.pop(fut, None)
+                        if slot is None:
+                            continue
+                        self._land(session, slot, fut, retire, stats)
+                        progress = True
+                # Absorb landed observations whose rows can get cache blocks;
+                # the rest stay pending (paged backpressure) and retry once a
+                # retirement frees blocks.  ``claimed`` makes the per-row
+                # checks cumulative: several observations admitted into one
+                # batched prefill must not jointly over-commit the pool.
                 rows, obs_lists = [], []
-                for fut in ready:
-                    slot = by_future.pop(fut, None)
-                    if slot is None:
+                claimed = 0
+                for slot in slots:
+                    if slot.state is not SlotState.PARKED \
+                            or slot.pending_obs is None:
                         continue
-                    ids = self._absorb(session, slot, fut, retire, stats)
-                    if ids is not None:
-                        rows.append(slot.row)
-                        obs_lists.append(ids)
-                        slot.future, slot.calls = None, []
-                        slot.state = SlotState.ACTIVE
+                    need = self._obs_blocks(session, slot)
+                    if need > self._free_after(session, claimed):
+                        continue
+                    claimed += need
+                    ids = slot.pending_obs
+                    tr = slot.job.traj
+                    tr.append(Role.OBSERVATION, ids)
+                    tr.meta["logprobs"].extend([0.0] * len(ids))
+                    rows.append(slot.row)
+                    obs_lists.append(ids)
+                    slot.pending_obs, slot.future, slot.calls = None, None, []
+                    slot.state = SlotState.ACTIVE
+                    progress = True
                 if rows:
                     # one batched prefill for every observation that landed
                     # this round (each row was checked to fit above)
@@ -241,30 +357,78 @@ class ContinuousScheduler:
                 # every row the engine will actually decode this round
                 active = [s for s in slots if s.state is SlotState.ACTIVE]
                 if not active:
+                    if not progress and not by_future:
+                        # pool wedged: every slot is waiting for blocks that
+                        # nothing left alive can free — evict the longest
+                        self._evict(session, slots, retire, stats)
                     continue
 
             stats["rounds"] += 1
             stats["slot_rounds"] += len(slots)
             stats["active_slot_rounds"] += len(active)
             row_keys = self._row_keys(slots)
+            n_parked = sum(1 for s in slots if s.state is SlotState.PARKED)
+            round_budget = self._round_budget(len(active), n_parked)
+            gen_kw = {}
+            if self._supports_rounds:
+                offsets = np.zeros((len(slots),), np.int32)
+                budgets = np.zeros((len(slots),), np.int32)
+                for s in active:
+                    done = len(s.turn_toks)      # tokens already this turn
+                    offsets[s.row] = done
+                    budgets[s.row] = max(0, min(round_budget,
+                                                turn_budget - done))
+                gen_kw = {"step_offsets": offsets, "row_budgets": budgets}
+                if round_budget < turn_budget:
+                    stats["adaptive_rounds"] += 1
+                stats["min_round_budget"] = min(stats["min_round_budget"],
+                                                float(round_budget))
             t0 = time.monotonic()
             res = self.engine.generate(
-                session, self.config.max_new_tokens, None,
-                temperature=self.config.temperature, row_keys=row_keys)
+                session, round_budget, None,
+                temperature=self.config.temperature, row_keys=row_keys,
+                **gen_kw)
             stats["gen_s"] += time.monotonic() - t0
+            if hasattr(self.engine, "cache_utilization"):
+                util = self.engine.cache_utilization(session)
+                if util is not None:
+                    stats["util_sum"] += util
+                    stats["util_rounds"] += 1
+                    stats["util_peak"] = max(stats["util_peak"], util)
 
+            stop_set = set(getattr(self.engine, "stop_ids", ()) or ())
             for slot in active:
                 n_tok = int(res.counts[slot.row])
-                if n_tok == 0:
-                    # the engine refused the row: context exhausted
-                    retire(slot, "max_len", finished=False)
+                if n_tok == 0 and not slot.turn_toks:
+                    if np.asarray(session.stopped)[slot.row]:
+                        # the engine refused the row: context exhausted
+                        retire(slot, "max_len", finished=False)
+                    else:
+                        # paged pool starvation: no blocks for this round —
+                        # stay ACTIVE and retry once a retirement frees some
+                        stats["starved_rounds"] += 1
                     continue
-                row_toks = res.tokens[slot.row, :n_tok].tolist()
+                if n_tok:
+                    slot.turn_toks.extend(res.tokens[slot.row, :n_tok]
+                                          .tolist())
+                    slot.turn_lps.extend(
+                        float(x) for x in res.logprobs[slot.row, :n_tok])
+                    progress = True
+                # A logical turn ends on a stop id, the full turn budget, or
+                # an exhausted context; otherwise the row stays mid-turn and
+                # resumes next round (round-sliced turns).
+                turn_done = (not self._supports_rounds
+                             or slot.turn_toks[-1] in stop_set
+                             or len(slot.turn_toks) >= turn_budget
+                             or bool(np.asarray(session.stopped)[slot.row]))
+                if not turn_done:
+                    continue
+                row_toks = slot.turn_toks
                 tr = slot.job.traj
                 tr.append(Role.MODEL, row_toks)
-                tr.meta["logprobs"].extend(
-                    float(x) for x in res.logprobs[slot.row, :n_tok])
-                stats["model_tokens"] += n_tok
+                tr.meta["logprobs"].extend(slot.turn_lps)
+                stats["model_tokens"] += len(row_toks)
+                slot.turn_toks, slot.turn_lps = [], []
                 slot.turn_idx += 1
                 text = self.tok.decode(row_toks)
                 calls, answer = self.env.manager.parse_response(text)
@@ -286,6 +450,18 @@ class ContinuousScheduler:
                 by_future[slot.future] = slot
                 slot.state = SlotState.PARKED
                 session.stopped[slot.row] = True
+
+            # Wedge breaker: rounds that move no token, land no future and
+            # admit nothing — with no tool I/O left in flight — mean every
+            # occupied row is starved for blocks that nothing alive can
+            # free.  Evict the longest row (vLLM-preemption analogue).
+            if progress or retired or by_future:
+                no_progress = 0
+            else:
+                no_progress += 1
+                if no_progress >= 2:
+                    self._evict(session, slots, retire, stats)
+                    no_progress = 0
 
     # ------------------------------------------------------------- internals
     def _build_jobs(self, tasks, key, gs) -> List[_Job]:
@@ -314,11 +490,10 @@ class ContinuousScheduler:
         turns = jnp.asarray([s.turn_idx for s in slots], jnp.int32)
         return _fold_rows(keys, turns)
 
-    def _absorb(self, session, slot: _Slot, fut, retire, stats
-                ) -> Optional[List[int]]:
-        """A parked row's tool results landed: record the observation on the
-        trajectory and return its token ids for the caller's batched
-        prefill, or retire the slot and return None if the context is full."""
+    def _land(self, session, slot: _Slot, fut, retire, stats) -> None:
+        """A parked row's tool results landed: tokenize the observation and
+        stage it on the slot (``pending_obs``) for the caller's batched,
+        block-gated prefill — or retire the slot if the context is full."""
         try:
             results: List[ToolResult] = fut.result()
         except Exception as e:  # executor bug — degrade to error observations
@@ -336,11 +511,87 @@ class ContinuousScheduler:
             # prefilled, matching the reference loop; the next round then
             # retires the row with counts==0)
             retire(slot, "max_len", finished=False)
-            return None
-        tr = slot.job.traj
-        tr.append(Role.OBSERVATION, ids)
-        tr.meta["logprobs"].extend([0.0] * len(ids))
-        return ids
+            return
+        slot.pending_obs = ids
+
+    def _obs_blocks(self, session, slot: _Slot) -> int:
+        """Blocks this pending observation's prefill would claim (0 for
+        contiguous engines/doubles)."""
+        if not hasattr(self.engine, "blocks_needed"):
+            return 0
+        target = (int(np.asarray(session.lengths)[slot.row])
+                  + len(slot.pending_obs))
+        return self.engine.blocks_needed(session, slot.row, target)
+
+    def _free_after(self, session, claimed: int) -> float:
+        """Free pool blocks once ``claimed`` (admitted earlier in the same
+        batched prefill) are accounted for; unbounded for contiguous."""
+        if not hasattr(self.engine, "free_blocks"):
+            return float("inf")
+        free = self.engine.free_blocks(session)
+        return float("inf") if free is None else free - claimed
+
+    def _evict(self, session, slots, retire, stats) -> None:
+        """Break a block-pool wedge by retiring the longest occupied row
+        (its trajectory keeps everything sampled so far, stop_reason
+        'max_len' — the cache-pressure analogue of context exhaustion)."""
+        lengths = np.asarray(session.lengths)
+        occupied = [s for s in slots if s.job is not None]
+        if not occupied:
+            return
+        victim = max(occupied, key=lambda s: int(lengths[s.row]))
+        stats["evictions"] += 1
+        retire(victim, "max_len", finished=False)
+
+    def _round_budget(self, n_active: int, n_parked: int) -> int:
+        """Per-round decode budget: the full turn budget while nothing is
+        parked, shrunk proportionally to the active fraction once slots are
+        waiting on tool futures — mostly-parked batches take short decode
+        rounds so landed observations are drained (and parked rows revived)
+        sooner.  Never changes sampled tokens, only how turns are sliced."""
+        budget = self.config.max_new_tokens
+        if (not getattr(self.config, "adaptive_budget", True)
+                or not self._supports_rounds or n_parked == 0):
+            return budget
+        frac = n_active / max(n_active + n_parked, 1)
+        return max(min(MIN_ROUND_BUDGET, budget),
+                   int(np.ceil(budget * frac)))
+
+    def _admission_blocks(self, prompt_len: int) -> int:
+        """Worst-case block footprint of admitting a task: its prompt plus
+        one full decode turn (0 for contiguous engines/doubles)."""
+        if not hasattr(self.engine, "blocks_for"):
+            return 0
+        return self.engine.blocks_for(prompt_len
+                                      + self.config.max_new_tokens)
+
+    def _can_admit(self, session, need: int, claimed: int = 0) -> bool:
+        """Free-block admission gate (always true for contiguous caches):
+        ``need`` blocks must fit beyond the worst-case growth reserve of the
+        rows already running and the ``claimed`` blocks of tasks admitted
+        earlier in the same batched refill."""
+        if (getattr(session, "allocator", None) is None
+                or not hasattr(self.engine, "admission_headroom")):
+            return True
+        budget = self.config.max_new_tokens
+        return (self.engine.admission_headroom(session, budget) - claimed
+                >= need)
+
+    def _initial_admissible(self, jobs: List[_Job]) -> int:
+        """How many of the first jobs fit the configured block pool at once
+        (worst case: prompt + one full turn each).  Unlimited for contiguous
+        engines or auto-sized pools."""
+        total = getattr(self.engine, "total_blocks", None)
+        if total is None:
+            return len(jobs)
+        budget = self.config.max_new_tokens
+        acc = n = 0
+        for job in jobs:
+            acc += self.engine.blocks_for(len(job.prompt_ids) + budget)
+            if acc > total:
+                break
+            n += 1
+        return max(1, n)
 
     # Engine doubles in tests implement only the coarse session API; fall
     # back to a full-batch extend with empty rows for them.

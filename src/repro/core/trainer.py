@@ -80,6 +80,32 @@ class RLTrainer:
         self.history: List[dict] = []
 
     # ------------------------------------------------------------------
+    def _rollout_and_score(self, tasks, key):
+        """Roll the tasks out; with a streaming-safe (rule-only) composer,
+        score each trajectory the moment it retires from the scheduler's
+        stream instead of in a terminal phase — scoring then overlaps the
+        tool futures still in flight on the executor's background loop
+        (paper §2.4.1 taken onto the trajectory stream).  Returns
+        ``(trajs in task x group order, n_pipelined)``; ``n_pipelined`` is
+        None when the batch path was used (the caller scores), else the
+        number of trajectories scored while the rollout was still running
+        (every retiree but the last, which by definition ends the stream).
+        """
+        stream_ok = (getattr(self.rewards, "streaming_safe", False)
+                     and self.worker.config.mode != "reference"
+                     and hasattr(self.worker.executor, "submit"))
+        if not stream_ok:
+            return (self.worker.rollout(tasks, key,
+                                        group_size=self.cfg.group_size),
+                    None)
+        from repro.core.scheduler import order_by_job_index
+        trajs = []
+        for tr in self.worker.rollout_stream(tasks, key,
+                                             group_size=self.cfg.group_size):
+            self.rewards.score_one(tr, tr.meta["ground_truth"])
+            trajs.append(tr)
+        return order_by_job_index(trajs), max(0, len(trajs) - 1)
+
     def _ref_logprobs_impl(self, params, tokens):
         logits, _, _ = self.model.apply(params, {"tokens": tokens})
         lp = token_logprobs(logits, tokens)
@@ -91,12 +117,16 @@ class RLTrainer:
         seed = int(jax.random.randint(k_task, (), 0, 2**31 - 1))
         tasks = self.env.sample_tasks(self.cfg.n_tasks_per_iter,
                                       split="train", seed=seed)
-        trajs = self.worker.rollout(tasks, k_roll,
-                                    group_size=self.cfg.group_size)
+        trajs, n_pipelined = self._rollout_and_score(tasks, k_roll)
         t_roll = time.monotonic() - t0
 
         gts = [t.meta["ground_truth"] for t in trajs]
-        rewards = self.rewards(trajs, gts)
+        if n_pipelined is None:
+            rewards = self.rewards(trajs, gts)
+            pipelined_fraction = 0.0
+        else:
+            rewards = np.array([t.reward for t in trajs], np.float32)
+            pipelined_fraction = n_pipelined / max(len(trajs), 1)
         adv = grpo_advantages(rewards, [t.group_id for t in trajs])
 
         old_lps = [np.array(t.meta["logprobs"], np.float32) for t in trajs]
@@ -139,6 +169,7 @@ class RLTrainer:
             "throughput_tok_s": n_model_tokens / max(t_roll + t_train, 1e-9),
             **{k: float(v) for k, v in metrics.items()},
         }
+        out["reward/pipelined_fraction"] = float(pipelined_fraction)
         # episode-termination distribution: over-budget/truncated rows are
         # now distinguishable from answered ones in the logs
         for reason in STOP_REASONS:
@@ -147,7 +178,9 @@ class RLTrainer:
         # continuous-batching scheduler stats (empty in reference mode)
         sched = getattr(self.worker, "last_stats", None) or {}
         for k in ("slot_occupancy", "overlap_factor", "tool_wait_s", "gen_s",
-                  "rounds", "refills", "n_slots"):
+                  "rounds", "refills", "n_slots", "cache_utilization",
+                  "cache_utilization_peak", "min_round_budget",
+                  "adaptive_rounds", "admission_deferrals", "evictions"):
             if k in sched:
                 out[f"rollout/{k}"] = float(sched[k])
         self.history.append(out)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.paged_attention import paged_attention_fwd
 from repro.kernels.ssd_scan import ssd_scan_fwd
 from repro.kernels.token_logprob import fused_token_logprob_fwd
 
@@ -30,6 +31,18 @@ def flash_attention(q, k, v, window: int = 0, causal: bool = True,
     """Causal GQA flash attention. q (B,S,H,D), k/v (B,S,Hk,D) -> (B,S,H,D)."""
     return flash_attention_fwd(q, k, v, window=window, causal=causal,
                                block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+@jax.jit
+def paged_attention(q, k_pool, v_pool, table, q_pos):
+    """Paged single-token decode attention over a block-table KV pool.
+
+    q (B,H,D), k_pool/v_pool (N,bs,Hk,·) with trash block last, table (B,T)
+    int32, q_pos (B,) int32 -> (B,H,Dv).  The block table is a scalar-prefetch
+    operand, so K/V blocks stream from HBM in table order with no gather copy.
+    """
+    return paged_attention_fwd(q, k_pool, v_pool, table, q_pos,
                                interpret=_interpret())
 
 

@@ -1,4 +1,5 @@
-from repro.models.model import Model
+from repro.models.model import Model, CachePolicy, ContiguousCache, PagedCache
 from repro.models.params import ParamSpec, abstract_params, init_params, param_count
 
-__all__ = ["Model", "ParamSpec", "abstract_params", "init_params", "param_count"]
+__all__ = ["Model", "CachePolicy", "ContiguousCache", "PagedCache",
+           "ParamSpec", "abstract_params", "init_params", "param_count"]

@@ -2,10 +2,30 @@
 
 One ``apply`` covers train (full-seq causal), prefill (full-seq causal +
 returns a filled cache) and decode (q_len tokens against a cache).  Caches are
-plain dicts (pytree-friendly; dry-runnable as ShapeDtypeStructs):
+plain dicts (pytree-friendly; dry-runnable as ShapeDtypeStructs) in one of two
+layouts:
+
+contiguous (one lane per batch row)::
 
   GQA : {"k": (B,M,Hk,D), "v": (B,M,Hk,Dv), "pos": (B,M) int32}
   MLA : {"ckv": (B,M,R), "krope": (B,M,Dr), "pos": (B,M) int32}
+
+paged (vLLM-style global block pool + per-row block table; the ``table`` key
+marks the layout)::
+
+  GQA : {"k": (N+1,bs,Hk,D), "v": (N+1,bs,Hk,Dv), "pos": (N+1,bs),
+         "table": (B,T) int32}
+  MLA : {"ckv": (N+1,bs,R), "krope": (N+1,bs,Dr), "pos": (N+1,bs),
+         "table": (B,T) int32}
+
+Block ``table[b, j]`` names the pool block holding row ``b``'s absolute
+positions ``[j*bs, (j+1)*bs)``; -1 = unallocated.  The last pool block
+(index N) is the *trash block*: writes for invalid positions (right-pads,
+inactive decode rows) are routed there so they can never corrupt a live
+row's block, and -1 table entries gather it (its ``pos`` is always -1, so
+it is never attended).  Block allocation itself is host-side
+(serving.engine.BlockAllocator); this module only scatters/gathers through
+the table.  Paged layout requires window=0 (full attention).
 
 ``pos`` holds the absolute position stored in each slot (-1 = empty); sliding
 windows use a ring buffer (slot = pos % window) which keeps the long-context
@@ -105,10 +125,84 @@ def kv_cache_specs(cfg, batch: int, max_len: int, window: int = 0) -> dict:
     return cache
 
 
+def init_paged_kv_cache(cfg, num_blocks: int, block_size: int, batch: int,
+                        max_blocks_per_row: int) -> dict:
+    """Paged cache for one attention layer: ``num_blocks`` allocatable pool
+    blocks + 1 trash block, and a (batch, max_blocks_per_row) block table
+    initialized to -1 (unallocated)."""
+    n = num_blocks + 1                       # last block = trash
+    dt = cfg.activation_dtype
+    pos = jnp.full((n, block_size), -1, jnp.int32)
+    table = jnp.full((batch, max_blocks_per_row), -1, jnp.int32)
+    if cfg.uses_mla:
+        return {
+            "ckv": jnp.zeros((n, block_size, cfg.kv_lora_rank), dt),
+            "krope": jnp.zeros((n, block_size, cfg.qk_rope_head_dim), dt),
+            "pos": pos,
+            "table": table,
+        }
+    return {
+        "k": jnp.zeros((n, block_size, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((n, block_size, cfg.n_kv_heads, cfg.v_dim), dt),
+        "pos": pos,
+        "table": table,
+    }
+
+
 def _scatter_cache(buf: jax.Array, new: jax.Array, slots: jax.Array) -> jax.Array:
     """buf (B,M,...), new (B,Q,...), slots (B,Q) int32 -> buf with rows written."""
     b_idx = jnp.arange(buf.shape[0])[:, None]
     return buf.at[b_idx, slots].set(new.astype(buf.dtype))
+
+
+def _paged_update(cache: dict, kv_leaves: dict, positions: jax.Array,
+                  kv_valid) -> tuple:
+    """Scatter new tokens through the block table and gather per-row K/V.
+
+    ``kv_leaves`` maps leaf name -> (B,Q,...) new values.  Returns
+    ``(new_cache, gathered, k_pos)`` where ``gathered[name]`` is the row-major
+    (B, T*bs, ...) view of the pool through the table and ``k_pos`` is the
+    matching (B, T*bs) absolute-position array (-1 = empty/never attend).
+
+    Writes for invalid entries (``kv_valid`` False or an unallocated table
+    slot) go to the trash block — the last pool block, which no table ever
+    references with a valid id — so a pad can never touch a live block.
+
+    The gather materializes each row's K/V contiguously (B, T*bs, ...) per
+    call — XLA-friendly and exact, but per-step HBM traffic still scales
+    with table width.  On real TPUs the decode hot path should instead use
+    kernels/paged_attention.py (ops.paged_attention), which streams pool
+    blocks via a scalar-prefetched table with no gather copy — see ROADMAP
+    open item (d); on this CPU container the interpret-mode kernel inside
+    the scanned decode loop would be far slower than the compiled gather.
+    """
+    any_leaf = next(iter(kv_leaves.values()))
+    B = any_leaf.shape[0]
+    pool_blocks, bs = cache["pos"].shape
+    trash = pool_blocks - 1
+    table = cache["table"]                                   # (B, T)
+
+    blk = jnp.clip(positions, 0, table.shape[1] * bs - 1) // bs
+    off = positions % bs
+    ids = jnp.take_along_axis(table, blk, axis=1)            # (B, Q)
+    valid = jnp.ones(positions.shape, bool) if kv_valid is None else kv_valid
+    valid = valid & (ids >= 0)
+    ids_w = jnp.where(valid, ids, trash)
+    store_pos = jnp.where(valid, positions, -1)
+
+    new_cache = dict(cache)
+    for name, new in kv_leaves.items():
+        new_cache[name] = cache[name].at[ids_w, off].set(
+            new.astype(cache[name].dtype))
+    new_cache["pos"] = cache["pos"].at[ids_w, off].set(store_pos)
+
+    gather_ids = jnp.where(table < 0, trash, table)          # (B, T)
+    gathered = {}
+    for name in kv_leaves:
+        g = new_cache[name][gather_ids]                      # (B, T, bs, ...)
+        gathered[name] = g.reshape((B, -1) + g.shape[3:])
+    k_pos = new_cache["pos"][gather_ids].reshape(B, -1)      # (B, T*bs)
+    return new_cache, gathered, k_pos
 
 
 # ---------------------------------------------------------------- blockwise attn
@@ -250,7 +344,11 @@ def gqa_apply(params, cfg, x, positions, cache=None, window: int = 0,
     k = shard_hint(k, ("batch", "seq", "kv_heads", None))
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and "table" in cache:
+        new_cache, gathered, k_pos = _paged_update(
+            cache, {"k": k, "v": v}, positions, kv_valid)
+        k_all, v_all = gathered["k"], gathered["v"]
+    elif cache is not None:
         M = cache["k"].shape[1]
         slots = positions % M
         store_pos = (positions if kv_valid is None
@@ -327,7 +425,11 @@ def mla_apply(params, cfg, x, positions, cache=None, window: int = 0,
     k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]  # shared head
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and "table" in cache:
+        new_cache, gathered, k_pos = _paged_update(
+            cache, {"ckv": ckv, "krope": k_rope}, positions, kv_valid)
+        ckv_all, krope_all = gathered["ckv"], gathered["krope"]
+    elif cache is not None:
         M = cache["ckv"].shape[1]
         slots = positions % M
         store_pos = (positions if kv_valid is None

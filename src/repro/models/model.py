@@ -6,11 +6,17 @@
   decode_step(params, tokens, positions, caches)  one-token decode
   init_cache / cache_struct                 decode caches (KV / SSM / hybrid)
   input_specs(shape_name)                   ShapeDtypeStruct stand-ins (dry-run)
+
+Decode-cache allocation is routed through a :class:`CachePolicy`:
+``ContiguousCache`` (the default — one fixed-width lane per batch row) or
+``PagedCache`` (a global block pool + per-row block tables for the attention
+families; SSM state is O(1)/row and stays per-row under either policy).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import math
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +32,189 @@ from repro.models.params import abstract_params, init_params, param_count
 def _bcast_stack(tree, n: int):
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+
+def _set_rows(axis: int, idx: jax.Array):
+    """tree_map fn writing ``new``'s rows into ``live`` at ``idx`` on ``axis``."""
+    def f(live, new):
+        sl = (slice(None),) * axis + (idx,)
+        return live.at[sl].set(new.astype(live.dtype))
+    return f
+
+
+# ================================================================ cache policy
+class CachePolicy:
+    """Strategy object for per-family decode-cache allocation.
+
+    ``init_cache`` builds the cache pytree for a batch; ``reset_rows``
+    returns individual batch rows to their pristine state (the continuous
+    batching slot-refill primitive).  Implementations resolve the per-family
+    batch-axis/stack-axis layouts (GQA/MLA attention stacks, SSM state,
+    hybrid groups, enc-dec decoder stacks) so no caller needs to know them.
+    """
+
+    def init_cache(self, model: "Model", batch: int, max_len: int,
+                   window: int = 0):
+        raise NotImplementedError
+
+    def reset_rows(self, model: "Model", cache, rows, max_len: int,
+                   window: int = 0, freed_blocks=None):
+        raise NotImplementedError
+
+
+class ContiguousCache(CachePolicy):
+    """Seed layout: one ``[max_len]``-wide lane per batch row per layer."""
+
+    def init_cache(self, model, batch, max_len, window=0):
+        c = model.cfg
+        if c.family in ("dense", "moe", "vlm", "encdec"):
+            n_stack = (c.n_layers - c.first_k_dense
+                       if c.family != "encdec" else c.n_layers)
+            single = ATT.init_kv_cache(c, batch, max_len, window)
+            out = {"stack": _bcast_stack(single, n_stack)}
+            if c.first_k_dense and c.family != "encdec":
+                out["dense"] = [ATT.init_kv_cache(c, batch, max_len, window)
+                                for _ in range(c.first_k_dense)]
+            return out
+        if c.family == "ssm":
+            single = SSM.init_ssm_cache(c, batch)
+            return {"stack": _bcast_stack(single, c.n_layers)}
+        if c.family == "hybrid":
+            G = c.n_layers // c.attn_every
+            mamba = _bcast_stack(_bcast_stack(SSM.init_ssm_cache(c, batch),
+                                              c.attn_every), G)
+            kv = _bcast_stack(ATT.init_kv_cache(c, batch, max_len, window), G)
+            return {"stack": {"mamba": mamba, "attn": kv}}
+        raise ValueError(c.family)
+
+    def reset_rows(self, model, cache, rows, max_len, window=0,
+                   freed_blocks=None):
+        c = model.cfg
+        idx = jnp.asarray(np.asarray(rows, np.int32).reshape(-1))
+        fresh = self.init_cache(model, int(idx.shape[0]), max_len, window)
+        tmap = jax.tree_util.tree_map
+        if c.family == "hybrid":
+            return {"stack": {
+                # mamba leaves: (G, attn_every, B, ...); attn leaves: (G, B, ...)
+                "mamba": tmap(_set_rows(2, idx), cache["stack"]["mamba"],
+                              fresh["stack"]["mamba"]),
+                "attn": tmap(_set_rows(1, idx), cache["stack"]["attn"],
+                             fresh["stack"]["attn"]),
+            }}
+        # dense/moe/vlm/encdec/ssm: "stack" leaves (n_stack, B, ...),
+        # optional "dense" list entries (B, ...)
+        out = {"stack": tmap(_set_rows(1, idx), cache["stack"],
+                             fresh["stack"])}
+        if "dense" in cache:
+            out["dense"] = [tmap(_set_rows(0, idx), cl, fl)
+                            for cl, fl in zip(cache["dense"], fresh["dense"])]
+        return out
+
+
+@dataclasses.dataclass
+class PagedCache(CachePolicy):
+    """vLLM-style paging: attention K/V lives in a global pool of
+    ``num_blocks`` x ``block_size`` token blocks shared by the whole batch,
+    addressed through per-row block tables (see models/attention.py for the
+    layout and trash-block convention).  Block ids are assigned host-side by
+    ``serving.engine.BlockAllocator``; this policy only shapes the pytree.
+
+    ``reset_rows`` is "free blocks to pool": the freed blocks' ``pos``
+    entries go to -1 (so a future occupant can never attend a previous
+    occupant's stale K/V) and the rows' table entries to -1.  SSM /
+    hybrid-mamba state keeps the per-row contiguous layout and per-row reset.
+    Requires window=0 — sliding-window ring buffers stay contiguous.
+    """
+    block_size: int
+    num_blocks: int
+
+    def max_blocks_per_row(self, max_len: int) -> int:
+        return max(1, math.ceil(max_len / self.block_size))
+
+    def init_cache(self, model, batch, max_len, window=0):
+        c = model.cfg
+        if c.family == "ssm":       # attention-free: nothing to page
+            return ContiguousCache().init_cache(model, batch, max_len, window)
+        if window:
+            raise ValueError("paged KV cache requires window=0 "
+                             "(sliding windows use the contiguous ring buffer)")
+        T_blk = self.max_blocks_per_row(max_len)
+
+        def paged_single():
+            return ATT.init_paged_kv_cache(c, self.num_blocks,
+                                           self.block_size, batch, T_blk)
+
+        if c.family in ("dense", "moe", "vlm", "encdec"):
+            n_stack = (c.n_layers - c.first_k_dense
+                       if c.family != "encdec" else c.n_layers)
+            out = {"stack": _bcast_stack(paged_single(), n_stack)}
+            if c.first_k_dense and c.family != "encdec":
+                out["dense"] = [paged_single()
+                                for _ in range(c.first_k_dense)]
+            return out
+        if c.family == "hybrid":
+            G = c.n_layers // c.attn_every
+            mamba = _bcast_stack(_bcast_stack(SSM.init_ssm_cache(c, batch),
+                                              c.attn_every), G)
+            return {"stack": {"mamba": mamba,
+                              "attn": _bcast_stack(paged_single(), G)}}
+        raise ValueError(c.family)
+
+    # -- helpers ---------------------------------------------------------
+    def _reset_paged(self, paged: dict, idx: jax.Array, blocks: jax.Array,
+                     stack: bool) -> dict:
+        """Free ``blocks`` (pos -> -1) and clear ``idx``'s table rows in one
+        per-layer paged dict (leaves optionally stacked on a leading axis)."""
+        out = dict(paged)
+        if stack:
+            out["pos"] = paged["pos"].at[:, blocks, :].set(-1)
+            out["table"] = paged["table"].at[:, idx, :].set(-1)
+        else:
+            out["pos"] = paged["pos"].at[blocks, :].set(-1)
+            out["table"] = paged["table"].at[idx, :].set(-1)
+        return out
+
+    def reset_rows(self, model, cache, rows, max_len, window=0,
+                   freed_blocks=None):
+        c = model.cfg
+        if c.family == "ssm":
+            return ContiguousCache().reset_rows(model, cache, rows, max_len,
+                                                window)
+        idx = jnp.asarray(np.asarray(rows, np.int32).reshape(-1))
+        blocks = jnp.asarray(
+            np.asarray([] if freed_blocks is None else list(freed_blocks),
+                       np.int32).reshape(-1))
+        if c.family == "hybrid":
+            fresh = SSM.init_ssm_cache(c, int(idx.shape[0]))
+            G = c.n_layers // c.attn_every
+            fresh = _bcast_stack(_bcast_stack(fresh, c.attn_every), G)
+            tmap = jax.tree_util.tree_map
+            return {"stack": {
+                "mamba": tmap(_set_rows(2, idx), cache["stack"]["mamba"],
+                              fresh),
+                "attn": self._reset_paged(cache["stack"]["attn"], idx,
+                                          blocks, stack=True),
+            }}
+        out = {"stack": self._reset_paged(cache["stack"], idx, blocks,
+                                          stack=True)}
+        if "dense" in cache:
+            out["dense"] = [self._reset_paged(cl, idx, blocks, stack=False)
+                            for cl in cache["dense"]]
+        return out
+
+    def set_tables(self, cache, table: np.ndarray):
+        """Broadcast a fresh host block table (B, T) into every ``table``
+        leaf of the cache (tables are identical across layers)."""
+        t = jnp.asarray(table, jnp.int32)
+
+        def walk(tree):
+            if isinstance(tree, dict):
+                return {k: (jnp.broadcast_to(t, v.shape) if k == "table"
+                            else walk(v)) for k, v in tree.items()}
+            if isinstance(tree, list):
+                return [walk(x) for x in tree]
+            return tree
+        return walk(cache)
 
 
 @dataclasses.dataclass
@@ -129,67 +318,33 @@ class Model:
         return logits, nc
 
     # ---------------------------------------------------------- caches
-    def init_cache(self, batch: int, max_len: int, window: int = 0):
-        c = self.cfg
-        if c.family in ("dense", "moe", "vlm", "encdec"):
-            n_stack = (c.n_layers - c.first_k_dense
-                       if c.family != "encdec" else c.n_layers)
-            single = ATT.init_kv_cache(c, batch, max_len, window)
-            out = {"stack": _bcast_stack(single, n_stack)}
-            if c.first_k_dense and c.family != "encdec":
-                out["dense"] = [ATT.init_kv_cache(c, batch, max_len, window)
-                                for _ in range(c.first_k_dense)]
-            return out
-        if c.family == "ssm":
-            single = SSM.init_ssm_cache(c, batch)
-            return {"stack": _bcast_stack(single, c.n_layers)}
-        if c.family == "hybrid":
-            G = c.n_layers // c.attn_every
-            mamba = _bcast_stack(_bcast_stack(SSM.init_ssm_cache(c, batch),
-                                              c.attn_every), G)
-            kv = _bcast_stack(ATT.init_kv_cache(c, batch, max_len, window), G)
-            return {"stack": {"mamba": mamba, "attn": kv}}
-        raise ValueError(c.family)
+    def init_cache(self, batch: int, max_len: int, window: int = 0,
+                   policy: Optional[CachePolicy] = None):
+        """Build the decode cache under ``policy`` (contiguous by default)."""
+        return (policy or ContiguousCache()).init_cache(
+            self, batch, max_len, window)
 
-    def cache_struct(self, batch: int, max_len: int, window: int = 0):
-        return jax.eval_shape(lambda: self.init_cache(batch, max_len, window))
+    def cache_struct(self, batch: int, max_len: int, window: int = 0,
+                     policy: Optional[CachePolicy] = None):
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, max_len, window, policy=policy))
 
-    def reset_cache_rows(self, cache, rows, max_len: int, window: int = 0):
+    def reset_cache_rows(self, cache, rows, max_len: int, window: int = 0,
+                         policy: Optional[CachePolicy] = None,
+                         freed_blocks=None):
         """Return ``cache`` with the given batch rows re-initialized.
 
-        The selected lanes go back to their :meth:`init_cache` state
-        (attention pos=-1, SSM conv/state zero) while every other lane is
-        untouched — the continuous-batching slot-refill primitive.  The
-        batch axis sits at a different depth per family (stacked caches are
-        built by broadcasting a per-batch single over layer dims), so the
-        scatter axis is resolved here rather than by generic tree mapping.
+        The selected rows go back to their :meth:`init_cache` state while
+        every other row is untouched — the continuous-batching slot-refill
+        primitive.  Under :class:`ContiguousCache` that re-zeros the rows'
+        fixed lanes (attention pos=-1, SSM conv/state zero); under
+        :class:`PagedCache` it frees the rows' blocks back to the pool
+        (``freed_blocks`` from the host allocator) and clears their block
+        tables.  The batch axis sits at a different depth per family, which
+        the policy resolves.
         """
-        c = self.cfg
-        idx = jnp.asarray(np.asarray(rows, np.int32).reshape(-1))
-        fresh = self.init_cache(int(idx.shape[0]), max_len, window)
-        tmap = jax.tree_util.tree_map
-
-        def set_rows(axis):
-            def f(live, new):
-                sl = (slice(None),) * axis + (idx,)
-                return live.at[sl].set(new.astype(live.dtype))
-            return f
-
-        if c.family == "hybrid":
-            return {"stack": {
-                # mamba leaves: (G, attn_every, B, ...); attn leaves: (G, B, ...)
-                "mamba": tmap(set_rows(2), cache["stack"]["mamba"],
-                              fresh["stack"]["mamba"]),
-                "attn": tmap(set_rows(1), cache["stack"]["attn"],
-                             fresh["stack"]["attn"]),
-            }}
-        # dense/moe/vlm/encdec/ssm: "stack" leaves (n_stack, B, ...),
-        # optional "dense" list entries (B, ...)
-        out = {"stack": tmap(set_rows(1), cache["stack"], fresh["stack"])}
-        if "dense" in cache:
-            out["dense"] = [tmap(set_rows(0), cl, fl)
-                            for cl, fl in zip(cache["dense"], fresh["dense"])]
-        return out
+        return (policy or ContiguousCache()).reset_rows(
+            self, cache, rows, max_len, window, freed_blocks=freed_blocks)
 
     # ---------------------------------------------------------- dry-run inputs
     def input_specs(self, shape_name: str, variant: str = "baseline") -> dict:

@@ -38,23 +38,106 @@ dynamic operand), and prefill lengths are bucketed the same way; rows that
 exhaust ``max_len`` are marked ``stopped`` so later turns never resample
 them.  A per-token Python-loop reference (``generate_reference``) is kept
 for parity tests and the decode-throughput benchmark.
+
+Two decode-loop extensions support the continuous-batching scheduler's
+round-based turns: ``row_budgets`` (B,) caps each row's tokens within one
+call, and ``step_offsets`` (B,) shifts the per-row sampling-stream index so a
+logical turn can be split across several ``generate`` calls without changing
+which random numbers each token draws — row ``b``'s i-th turn token always
+samples from ``fold_in(row_keys[b], i)`` no matter how the calls are sliced.
+
+``cache_mode="paged"`` switches the KV layout from per-row contiguous lanes
+to a global block pool + per-row block tables (models/attention.py): a
+:class:`BlockAllocator` hands out fixed-size token blocks on
+prefill/extend/decode and takes them back on ``reset_rows``, so memory scales
+with *live tokens* instead of ``batch x max_len`` and a retiring long row can
+refill several short queued tasks.  Admission hooks (``blocks_for`` /
+``free_blocks`` / ``admission_headroom`` / ``cache_utilization``) let the
+scheduler gate refills on free-block availability.  The contiguous layout
+(the default) is kept as the parity oracle; both produce token-identical
+results (tests/test_paged_cache.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import Model
+from repro.models import Model, PagedCache
 
 BUCKET = 32
 
 
 def _bucket(n: int) -> int:
     return max(BUCKET, ((n + BUCKET - 1) // BUCKET) * BUCKET)
+
+
+class BlockAllocator:
+    """Host-side free-list allocator for the paged KV cache.
+
+    Owns the (batch, max_blocks_per_row) block table; blocks are appended to
+    a row on ``ensure`` (copy-free growth — extending a row never moves
+    existing blocks) and returned to the free list on ``free_rows``.  Device
+    tables are synced from :attr:`table` by the engine after any change.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, batch: int,
+                 max_blocks_per_row: int):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.table = np.full((batch, max_blocks_per_row), -1, np.int32)
+        self.n_blocks = np.zeros((batch,), np.int32)
+        self.peak_used = 0
+        self.dirty = False          # host table changed since last device sync
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return max(0, math.ceil(n_tokens / self.block_size))
+
+    def capacity(self, row: int) -> int:
+        """Tokens the row can hold in its currently mapped blocks."""
+        return int(self.n_blocks[row]) * self.block_size
+
+    def ensure(self, row: int, target_len: int) -> int:
+        """Map blocks so ``row`` can hold ``target_len`` tokens; allocates as
+        many of the missing blocks as the pool can supply and returns the
+        resulting capacity (callers decide whether partial coverage is an
+        error or a reason to shrink the decode budget)."""
+        need = self.blocks_for(target_len) - int(self.n_blocks[row])
+        for _ in range(min(need, len(self._free))):
+            self.table[row, self.n_blocks[row]] = self._free.pop()
+            self.n_blocks[row] += 1
+            self.dirty = True
+        self.peak_used = max(self.peak_used, self.used_count)
+        return self.capacity(row)
+
+    def free_rows(self, rows: Sequence[int]) -> List[int]:
+        """Return every block of ``rows`` to the pool; returns the freed ids
+        (the engine resets their ``pos`` entries device-side so a future
+        occupant can never attend stale K/V)."""
+        freed: List[int] = []
+        for r in rows:
+            r = int(r)
+            n = int(self.n_blocks[r])
+            freed.extend(int(b) for b in self.table[r, :n])
+            self.table[r, :] = -1
+            self.n_blocks[r] = 0
+        self._free.extend(freed)
+        if freed:
+            self.dirty = True
+        return freed
 
 
 @dataclasses.dataclass
@@ -110,6 +193,8 @@ class DecodeSession:
     last_logits: jnp.ndarray       # (B, V) logits at each row's last real token
     stopped: np.ndarray            # (B,) bool
     cross_kv: object = None        # enc-dec only
+    allocator: Optional[BlockAllocator] = None   # paged mode only
+    cache_policy: object = None                  # paged mode only
 
     @property
     def batch(self) -> int:
@@ -119,7 +204,12 @@ class DecodeSession:
 class GenerationEngine:
     def __init__(self, model: Model, params, pad_id: int, stop_ids: Sequence[int],
                  max_len: int = 1024, temperature: float = 1.0,
-                 window: int = 0):
+                 window: int = 0, cache_mode: str = "contiguous",
+                 page_size: int = 16, num_blocks: int = 0):
+        """``cache_mode="paged"`` allocates KV memory as ``num_blocks`` blocks
+        of ``page_size`` tokens shared by the whole batch (0 = one full
+        ``max_len`` worth per row, i.e. the contiguous footprint — pass less
+        to actually oversubscribe).  Requires window=0."""
         self.model = model
         self.params = params
         self.pad_id = pad_id
@@ -127,10 +217,86 @@ class GenerationEngine:
         self.max_len = max_len
         self.temperature = temperature
         self.window = window
+        if cache_mode not in ("contiguous", "paged"):
+            raise ValueError(f"unknown cache_mode {cache_mode!r}")
+        if cache_mode == "paged" and window:
+            raise ValueError("cache_mode='paged' requires window=0")
+        self.cache_mode = cache_mode
+        self.page_size = page_size
+        self.num_blocks = num_blocks
         self._prefill_jit = jax.jit(self._prefill_impl)
         self._decode_jit = jax.jit(self._decode_impl)
         self._loop_jit = jax.jit(self._decode_loop_impl,
                                  static_argnames=("T", "per_row"))
+
+    # ------------------------------------------------------------- paged API
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` (0 in contiguous mode — every
+        row's lane is preallocated)."""
+        if self.cache_mode != "paged":
+            return 0
+        return max(0, math.ceil(n_tokens / self.page_size))
+
+    @property
+    def total_blocks(self) -> Optional[int]:
+        """Configured pool size, or None when auto-sized at ``start``."""
+        if self.cache_mode != "paged" or not self.num_blocks:
+            return None
+        return self.num_blocks
+
+    def free_blocks(self, session: DecodeSession) -> Optional[int]:
+        if session.allocator is None:
+            return None
+        return session.allocator.free_count
+
+    def cache_utilization(self, session: DecodeSession) -> Optional[float]:
+        """Fraction of pool blocks currently mapped to rows."""
+        if session.allocator is None:
+            return None
+        a = session.allocator
+        return a.used_count / max(a.num_blocks, 1)
+
+    def blocks_needed(self, session: DecodeSession, row: int,
+                      target_len: int) -> int:
+        """Blocks ``row`` still has to claim to grow to ``target_len``
+        tokens (0 in contiguous mode)."""
+        if session.allocator is None:
+            return 0
+        a = session.allocator
+        return max(0, a.blocks_for(target_len) - int(a.n_blocks[int(row)]))
+
+    def can_alloc(self, session: DecodeSession, row: int,
+                  target_len: int) -> bool:
+        """Could ``row`` grow to ``target_len`` tokens right now?"""
+        if session.allocator is None:
+            return True
+        return (self.blocks_needed(session, row, target_len)
+                <= session.allocator.free_count)
+
+    def admission_headroom(self, session: DecodeSession, budget: int) -> float:
+        """Free blocks beyond what currently occupied rows may still claim to
+        decode ``budget`` more tokens each — the scheduler admits a new task
+        only if its worst-case footprint fits in this headroom, so admitting
+        can never starve a live row's decode."""
+        if session.allocator is None:
+            return float("inf")
+        a = session.allocator
+        reserve = 0
+        for r in range(session.batch):
+            if a.n_blocks[r] > 0:
+                target = min(int(session.lengths[r]) + budget, self.max_len)
+                reserve += max(0, a.blocks_for(target) - int(a.n_blocks[r]))
+        return a.free_count - reserve
+
+    def _sync_tables(self, session: DecodeSession) -> None:
+        """Push the host block table into the device cache, but only when
+        the allocator actually changed it — in the steady decode state
+        (every row's capacity already covers its budget) this is a no-op."""
+        if not session.allocator.dirty:
+            return
+        session.cache = session.cache_policy.set_tables(
+            session.cache, session.allocator.table)
+        session.allocator.dirty = False
 
     # ------------------------------------------------------------- impl fns
     def _prefill_impl(self, params, cache, tokens, positions, valid, cross_kv):
@@ -150,7 +316,7 @@ class GenerationEngine:
 
     def _decode_loop_impl(self, params, cache, last_logits, lengths, stopped,
                           key, row_keys, n_max, temperature, stop_arr,
-                          cross_kv, *, T, per_row):
+                          cross_kv, offsets, budgets, *, T, per_row):
         """Fused decode turn: a while_loop carrying the cache on device.
 
         ``T`` (static) is the bucketed output-buffer width; ``n_max``
@@ -162,8 +328,10 @@ class GenerationEngine:
 
         ``per_row`` (static) selects the sampling stream: False draws every
         step from one shared split chain of ``key``; True draws row ``b``'s
-        step ``t`` from ``fold_in(row_keys[b], t)`` so each row's randomness
-        is independent of the batch composition (continuous batching).
+        step ``t`` from ``fold_in(row_keys[b], offsets[b] + t)`` so each
+        row's randomness is independent of the batch composition, and of how
+        a logical turn is sliced into calls (continuous batching rounds).
+        ``budgets`` (B,) caps tokens per row within this call (<= n_max).
         """
         B = last_logits.shape[0]
         pad = jnp.int32(self.pad_id)
@@ -177,8 +345,7 @@ class GenerationEngine:
         def body(carry):
             t, key, cache, last_logits, lengths, active, toks, lps, counts = carry
             if per_row:
-                step_keys = jax.vmap(jax.random.fold_in,
-                                     in_axes=(0, None))(row_keys, t)
+                step_keys = jax.vmap(jax.random.fold_in)(row_keys, offsets + t)
                 tok, lp = _sample_rows(last_logits, step_keys, temperature)
             else:
                 key, sub = jax.random.split(key)
@@ -197,12 +364,13 @@ class GenerationEngine:
             last_logits = jnp.where(accept[:, None], logits[:, 0, :],
                                     last_logits)
             lengths = lengths + accept.astype(lengths.dtype)
-            active = accept & ~hit_stop & (lengths < max_pos)
+            active = (accept & ~hit_stop & (lengths < max_pos)
+                      & (counts < budgets))
             return (t + 1, key, cache, last_logits, lengths, active,
                     toks, lps, counts)
 
         init = (jnp.int32(0), key, cache, last_logits, lengths,
-                (~stopped) & (lengths < max_pos),
+                (~stopped) & (lengths < max_pos) & (budgets > 0),
                 jnp.full((B, T), pad, jnp.int32),
                 jnp.zeros((B, T), jnp.float32),
                 jnp.zeros((B,), jnp.int32))
@@ -220,13 +388,25 @@ class GenerationEngine:
             enc = T.encdec_encode(self.params, self.model.cfg,
                                   jnp.asarray(prefix_embeds))
             cross_kv = T.encdec_cross_kv(self.params, self.model.cfg, enc)
-        cache = self.model.init_cache(B, self.max_len, self.window)
+        allocator = policy = None
+        if self.cache_mode == "paged":
+            per_row = max(1, math.ceil(self.max_len / self.page_size))
+            n_blocks = self.num_blocks or B * per_row
+            policy = PagedCache(block_size=self.page_size,
+                                num_blocks=n_blocks)
+            allocator = BlockAllocator(n_blocks, self.page_size, B, per_row)
+            cache = self.model.init_cache(B, self.max_len, self.window,
+                                          policy=policy)
+        else:
+            cache = self.model.init_cache(B, self.max_len, self.window)
         session = DecodeSession(
             cache=cache,
             lengths=np.zeros((B,), np.int64),
             last_logits=jnp.zeros((B, self.model.cfg.vocab_size)),
             stopped=np.zeros((B,), bool),
             cross_kv=cross_kv,
+            allocator=allocator,
+            cache_policy=policy,
         )
         self.extend(session, contexts)
         return session
@@ -242,6 +422,20 @@ class GenerationEngine:
                 f"context overflow: extend to {(session.lengths + lens).max()} "
                 f"tokens > engine max_len={self.max_len}; raise max_len or "
                 f"shorten prompts")
+        if session.allocator is not None:
+            # prefill needs full coverage: map blocks for every new token
+            # before any position is written (no partial prefills)
+            for i, n in enumerate(lens):
+                if n == 0:
+                    continue
+                target = int(session.lengths[i]) + int(n)
+                if session.allocator.ensure(i, target) < target:
+                    raise RuntimeError(
+                        f"paged KV pool exhausted: row {i} needs "
+                        f"{session.allocator.blocks_for(target)} blocks, "
+                        f"{session.allocator.free_count} free; raise "
+                        f"num_blocks or gate admission on free blocks")
+            self._sync_tables(session)
         L = _bucket(int(lens.max()))
         toks = np.full((B, L), self.pad_id, np.int32)
         pos = np.zeros((B, L), np.int32)
@@ -300,8 +494,15 @@ class GenerationEngine:
         idx = np.asarray(list(rows), np.int64)
         if idx.size == 0:
             return
-        session.cache = self.model.reset_cache_rows(
-            session.cache, idx, self.max_len, self.window)
+        if session.allocator is not None:
+            freed = session.allocator.free_rows(idx)
+            session.cache = self.model.reset_cache_rows(
+                session.cache, idx, self.max_len, self.window,
+                policy=session.cache_policy, freed_blocks=freed)
+            self._sync_tables(session)
+        else:
+            session.cache = self.model.reset_cache_rows(
+                session.cache, idx, self.max_len, self.window)
         session.last_logits = session.last_logits.at[jnp.asarray(idx)].set(0.0)
         lengths = np.asarray(session.lengths).copy()
         lengths[idx] = 0
@@ -313,7 +514,8 @@ class GenerationEngine:
     def generate(self, session: DecodeSession, max_new_tokens: int,
                  key: Optional[jax.Array] = None,
                  temperature: Optional[float] = None,
-                 row_keys: Optional[jax.Array] = None) -> GenerationResult:
+                 row_keys: Optional[jax.Array] = None,
+                 step_offsets=None, row_budgets=None) -> GenerationResult:
         """Sample per-row continuations until a stop id / budget / max_len.
 
         Runs the fused on-device decode loop; the result (including the stop
@@ -327,12 +529,39 @@ class GenerationEngine:
         row's tokens then depend only on its own key and context, never on
         which rows share the batch — required by the continuous-batching
         scheduler for parity with the turn-synchronous reference.
+
+        ``step_offsets`` (B,) shifts each row's sampling-stream index (step
+        ``t`` draws from ``fold_in(row_keys[b], step_offsets[b] + t)``) and
+        ``row_budgets`` (B,) caps tokens per row within this call: together
+        they let the scheduler split one logical turn across several calls
+        (adaptive round budgets) without changing any sampled token.
+
+        In paged mode, blocks for each active row's worst-case growth are
+        mapped before entering the loop; if the pool cannot cover a row's
+        full budget, that row's budget shrinks to its mapped capacity (0 =
+        starved this call — the caller retries once blocks free up).
         """
         per_row = row_keys is not None
         if not per_row and key is None:
             raise ValueError("generate() needs either key or row_keys")
         temp = self.temperature if temperature is None else temperature
         T = _bucket(max_new_tokens)
+        B = session.batch
+        budgets = np.full((B,), min(max_new_tokens, T), np.int32)
+        if row_budgets is not None:
+            budgets = np.minimum(budgets, np.asarray(row_budgets, np.int32))
+        offsets = (np.zeros((B,), np.int32) if step_offsets is None
+                   else np.asarray(step_offsets, np.int32))
+        if session.allocator is not None:
+            stopped_now = np.asarray(session.stopped)
+            for r in range(B):
+                if stopped_now[r] or budgets[r] <= 0:
+                    continue
+                cur = int(session.lengths[r])
+                target = min(cur + int(budgets[r]), self.max_len)
+                cap = session.allocator.ensure(r, target)
+                budgets[r] = max(0, min(int(budgets[r]), cap - cur))
+            self._sync_tables(session)
         stop_arr = jnp.asarray(np.asarray(self.stop_ids, np.int32)
                                .reshape(-1))
         toks, lps, counts, cache, last_logits, lengths, stopped = \
@@ -342,8 +571,9 @@ class GenerationEngine:
                 jnp.asarray(session.stopped),
                 None if per_row else key,
                 jnp.asarray(row_keys) if per_row else None,
-                jnp.int32(min(max_new_tokens, T)), jnp.float32(temp),
-                stop_arr, session.cross_kv, T=T, per_row=per_row)
+                jnp.int32(int(budgets.max(initial=0))), jnp.float32(temp),
+                stop_arr, session.cross_kv, jnp.asarray(offsets),
+                jnp.asarray(budgets), T=T, per_row=per_row)
         session.cache = cache
         session.last_logits = last_logits
         # single host materialization per turn
@@ -360,12 +590,14 @@ class GenerationEngine:
     def generate_reference(self, session: DecodeSession, max_new_tokens: int,
                            key: Optional[jax.Array] = None,
                            temperature: Optional[float] = None,
-                           row_keys: Optional[jax.Array] = None
+                           row_keys: Optional[jax.Array] = None,
+                           step_offsets=None, row_budgets=None
                            ) -> GenerationResult:
         """Per-token Python-loop decoder (the seed implementation).
 
         Semantically identical to :meth:`generate` (including the per-row
-        ``row_keys`` sampling mode) — kept as the parity oracle
+        ``row_keys`` sampling mode and the ``step_offsets``/``row_budgets``
+        round-slicing controls) — kept as the parity oracle
         (tests/test_serving.py) and the baseline the decode-throughput
         benchmark measures the fused loop against.
         """
@@ -373,14 +605,34 @@ class GenerationEngine:
         B = session.batch
         out_tokens: List[List[int]] = [[] for _ in range(B)]
         out_logps: List[List[float]] = [[] for _ in range(B)]
-        active = ~session.stopped & (session.lengths < self.max_len - 1)
+        budgets = np.full((B,), max_new_tokens, np.int64)
+        if row_budgets is not None:
+            budgets = np.minimum(budgets, np.asarray(row_budgets, np.int64))
+        offsets = (np.zeros((B,), np.int32) if step_offsets is None
+                   else np.asarray(step_offsets, np.int32))
+        if session.allocator is not None:
+            # same block mapping as the fused path: without it, decoded
+            # positions past the last mapped block would route to the trash
+            # block and silently vanish from attention
+            stopped_now = np.asarray(session.stopped)
+            for r in range(B):
+                if stopped_now[r] or budgets[r] <= 0:
+                    continue
+                cur = int(session.lengths[r])
+                target = min(cur + int(budgets[r]), self.max_len)
+                cap = session.allocator.ensure(r, target)
+                budgets[r] = max(0, min(int(budgets[r]), cap - cur))
+            self._sync_tables(session)
+        active = (~session.stopped & (session.lengths < self.max_len - 1)
+                  & (budgets > 0))
 
         for step in range(max_new_tokens):
             if not active.any():
                 break
             if row_keys is not None:
-                step_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
-                    jnp.asarray(row_keys), jnp.int32(step))
+                step_keys = jax.vmap(jax.random.fold_in)(
+                    jnp.asarray(row_keys),
+                    jnp.asarray(offsets + step, jnp.int32))
                 cur_tok, cur_lp = _sample_rows(session.last_logits, step_keys,
                                                jnp.float32(temp))
             else:
@@ -406,6 +658,7 @@ class GenerationEngine:
                                             logits, session.last_logits)
             session.lengths = session.lengths + accept.astype(np.int64)
             active &= session.lengths < self.max_len - 1
+            active &= np.array([len(t) for t in out_tokens]) < budgets
 
         session.stopped = session.stopped | (session.lengths >= self.max_len - 1)
         return GenerationResult.from_lists(out_tokens, out_logps,

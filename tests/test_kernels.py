@@ -71,6 +71,65 @@ def test_flash_matches_model_attention_path():
                                atol=2e-4, rtol=2e-3)
 
 
+# ------------------------------------------------------------ paged attention
+def _paged_setup(seed, B, H, Hk, D, Dv, N, bs, T, lengths):
+    """Random pools + shuffled block assignment for the given row lengths."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    k_pool = jnp.asarray(rng.normal(size=(N, bs, Hk, D)), jnp.float32)
+    v_pool = jnp.asarray(rng.normal(size=(N, bs, Hk, Dv)), jnp.float32)
+    table = np.full((B, T), -1, np.int32)
+    free = list(rng.permutation(N - 1))          # last block = trash
+    for b, n in enumerate(lengths):
+        for j in range((n + bs - 1) // bs):
+            table[b, j] = free.pop()
+    q_pos = jnp.asarray([n - 1 for n in lengths], jnp.int32)
+    return q, k_pool, v_pool, jnp.asarray(table), q_pos
+
+
+@pytest.mark.parametrize("B,H,Hk,D,bs,lengths", [
+    (3, 4, 2, 32, 16, [41, 8, 64]),
+    (2, 4, 1, 64, 8, [5, 23]),       # MQA, partial blocks
+    (1, 8, 8, 32, 32, [96]),         # MHA
+])
+def test_paged_attention_kernel_matches_ref(B, H, Hk, D, bs, lengths):
+    from repro.kernels.paged_attention import paged_attention_fwd
+    T = max((n + bs - 1) // bs for n in lengths)
+    N = sum((n + bs - 1) // bs for n in lengths) + 2
+    q, k_pool, v_pool, table, q_pos = _paged_setup(
+        0, B, H, Hk, D, D, N, bs, T, lengths)
+    out = paged_attention_fwd(q, k_pool, v_pool, table, q_pos,
+                              interpret=True)
+    ref = R.paged_attention_ref(q, k_pool, v_pool, table, q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_ref_matches_dense_attention():
+    """The paged reference itself must equal ordinary causal attention on an
+    equivalent contiguous layout (the last token's output)."""
+    B, H, Hk, D, bs, T = 2, 4, 2, 32, 16, 3
+    lengths = [33, 48]
+    N = 8
+    q, k_pool, v_pool, table, q_pos = _paged_setup(
+        1, B, H, Hk, D, D, N, bs, T, lengths)
+    S = T * bs
+    # pack each row's blocks back into a contiguous (B,S,...) layout
+    ids = np.where(np.asarray(table) < 0, N - 1, np.asarray(table))
+    k_rows = np.asarray(k_pool)[ids].reshape(B, S, Hk, D)
+    v_rows = np.asarray(v_pool)[ids].reshape(B, S, Hk, D)
+    out = R.paged_attention_ref(q, k_pool, v_pool, table, q_pos)
+    for b, n in enumerate(lengths):
+        qb = jnp.asarray(q)[b : b + 1, None]                 # (1,1,H,D)
+        # dense ref wants equal q/k lengths: append q as the last position
+        kb = jnp.asarray(k_rows[b : b + 1, :n])
+        vb = jnp.asarray(v_rows[b : b + 1, :n])
+        qfull = jnp.zeros((1, n, H, D), jnp.float32).at[:, -1].set(qb[:, 0])
+        dense = R.attention_ref(qfull, kb, vb)[:, -1]        # (1,H,D)
+        np.testing.assert_allclose(np.asarray(out[b : b + 1]),
+                                   np.asarray(dense), atol=2e-5, rtol=2e-5)
+
+
 # ------------------------------------------------------------ SSD scan
 @pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
     (2, 64, 4, 16, 1, 32, 16),

@@ -1,0 +1,256 @@
+"""Paged KV cache: block-pool/block-table parity with the contiguous layout
+across engine ops and the continuous scheduler, block reuse after reset, and
+zero-free-blocks backpressure (ISSUE 3 acceptance criteria)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.rollout import RolloutConfig, RolloutWorker
+from repro.data.tokenizer import default_tokenizer
+from repro.models import Model
+from repro.serving.engine import BlockAllocator, GenerationEngine
+from repro.tools.search_env import SearchEnv
+
+
+@pytest.fixture(scope="module")
+def gqa_setup():
+    cfg = get_config("tiny")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = default_tokenizer(cfg.vocab_size)
+    return cfg, model, params, tok
+
+
+@pytest.fixture(scope="module")
+def mla_setup():
+    # DeepSeek-V2 reduced: MLA cache family (ckv/krope) + a first-k-dense
+    # layer, so both the stacked and the per-layer "dense" paged pools run
+    cfg = get_config("deepseek-v2-236b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = default_tokenizer(cfg.vocab_size)
+    return cfg, model, params, tok
+
+
+def _engines(model, params, tok, max_len=96, num_blocks=0, page_size=16):
+    kw = dict(pad_id=tok.pad_id, stop_ids=(tok.eos_id,), max_len=max_len,
+              temperature=1.0)
+    contiguous = GenerationEngine(model, params, **kw)
+    paged = GenerationEngine(model, params, cache_mode="paged",
+                             page_size=page_size, num_blocks=num_blocks, **kw)
+    return contiguous, paged
+
+
+def _multi_turn(eng, tok, ctx, seed=5):
+    """start -> generate -> extend -> generate -> reset row 0 -> refill ->
+    generate: the full per-slot session-op surface in one pass."""
+    rk = jax.random.split(jax.random.PRNGKey(seed), len(ctx))
+    s = eng.start([list(c) for c in ctx])
+    r1 = eng.generate(s, 12, row_keys=rk)
+    eng.extend(s, [tok.encode(" more")] + [[]] * (len(ctx) - 1))
+    r2 = eng.generate(s, 8, row_keys=rk)
+    eng.reset_rows(s, [0])
+    eng.extend_rows(s, [0], [tok.encode("fresh occupant")])
+    rk2 = jax.random.split(jax.random.PRNGKey(seed + 1), len(ctx))
+    r3 = eng.generate(s, 8, row_keys=rk2)
+    return (r1, r2, r3), s
+
+
+@pytest.mark.parametrize("setup_name", ["gqa_setup", "mla_setup"])
+def test_engine_paged_matches_contiguous(setup_name, request):
+    """Token- and logprob-exact parity of the paged cache across generate /
+    extend / reset_rows / extend_rows, for both attention cache families."""
+    cfg, model, params, tok = request.getfixturevalue(setup_name)
+    contiguous, paged = _engines(model, params, tok)
+    ctx = [tok.encode("paged parity a"), tok.encode("b"),
+           tok.encode("row three !")]
+    rc, sc = _multi_turn(contiguous, tok, ctx)
+    rp, sp = _multi_turn(paged, tok, ctx)
+    for a, b in zip(rc, rp):
+        assert a.token_lists() == b.token_lists()
+        for ra, rb in zip(a.logprob_lists(), b.logprob_lists()):
+            np.testing.assert_allclose(ra, rb, atol=1e-5)
+    np.testing.assert_array_equal(sc.lengths, sp.lengths)
+    np.testing.assert_array_equal(sc.stopped, sp.stopped)
+
+
+def test_block_reuse_after_reset_rows(gqa_setup):
+    """A freed block handed to a new occupant must behave exactly like a
+    fresh pool block: no stale K/V or positions can leak (the paged analogue
+    of the contiguous lane-reset test).  The tiny pool forces the second
+    occupant onto the first occupant's recycled blocks."""
+    cfg, model, params, tok = gqa_setup
+    # 4 blocks of 16 = room for exactly one 64-token row at a time
+    eng = GenerationEngine(model, params, pad_id=tok.pad_id,
+                           stop_ids=(tok.eos_id,), max_len=64,
+                           temperature=1.0, cache_mode="paged",
+                           page_size=16, num_blocks=4)
+    first = tok.encode("first occupant with some history")
+    second = tok.encode("second occupant")
+    rk = jax.random.split(jax.random.PRNGKey(3), 1)
+    rk2 = jax.random.split(jax.random.PRNGKey(9), 1)
+
+    s = eng.start([list(first)])
+    eng.generate(s, 8, row_keys=rk)
+    used_before = s.allocator.used_count
+    assert used_before > 0
+    eng.reset_rows(s, [0])
+    assert s.allocator.used_count == 0          # blocks back in the pool
+    eng.extend_rows(s, [0], [list(second)])
+    rA = eng.generate(s, 8, row_keys=rk2)
+
+    sB = eng.start([list(second)])              # fresh session, fresh pool
+    rB = eng.generate(sB, 8, row_keys=rk2)
+    assert rA.token_lists() == rB.token_lists()
+    np.testing.assert_allclose(rA.logprob_lists()[0], rB.logprob_lists()[0],
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("setup_name", ["gqa_setup", "mla_setup"])
+def test_scheduler_paged_parity_with_reference(setup_name, request):
+    """Acceptance: paged decode reproduces the contiguous path
+    token-for-token under the continuous scheduler, GQA and MLA families."""
+    cfg, model, params, tok = request.getfixturevalue(setup_name)
+    env = SearchEnv(n_entities=20, seed=0)
+    tasks = env.sample_tasks(2, seed=3)
+
+    def run(mode, cache_mode):
+        eng = GenerationEngine(model, params, pad_id=tok.pad_id,
+                               stop_ids=(tok.eos_id,), max_len=512,
+                               cache_mode=cache_mode, page_size=16)
+        worker = RolloutWorker(eng, env, tok,
+                               RolloutConfig(max_turns=2, max_new_tokens=16,
+                                             group_size=2, mode=mode))
+        return worker.rollout(tasks, jax.random.PRNGKey(7))
+
+    ref = run("reference", "contiguous")
+    paged = run("continuous", "paged")
+    assert len(ref) == len(paged) == 4
+    for a, b in zip(paged, ref):
+        assert a.tokens() == b.tokens()
+        assert a.loss_mask() == b.loss_mask()
+        np.testing.assert_allclose(a.meta["logprobs"], b.meta["logprobs"],
+                                   atol=1e-5)
+        assert a.stop_reason == b.stop_reason
+
+
+def test_zero_free_blocks_backpressure(gqa_setup):
+    """With a pool sized for ~2 concurrent episodes and 6 queued tasks, the
+    scheduler admits by free-block availability: queued tasks wait instead
+    of corrupting a live lane, every trajectory completes, and the result is
+    token-identical to the unconstrained reference."""
+    cfg, model, params, tok = gqa_setup
+    env = SearchEnv(n_entities=20, seed=0)
+    tasks = env.sample_tasks(3, seed=3)
+
+    ref_eng = GenerationEngine(model, params, pad_id=tok.pad_id,
+                               stop_ids=(tok.eos_id,), max_len=512)
+    ref = RolloutWorker(ref_eng, env, tok,
+                        RolloutConfig(max_turns=3, max_new_tokens=16,
+                                      group_size=2, mode="reference")
+                        ).rollout(tasks, jax.random.PRNGKey(7))
+
+    eng = GenerationEngine(model, params, pad_id=tok.pad_id,
+                           stop_ids=(tok.eos_id,), max_len=512,
+                           cache_mode="paged", page_size=16, num_blocks=14)
+    worker = RolloutWorker(eng, env, tok,
+                           RolloutConfig(max_turns=3, max_new_tokens=16,
+                                         group_size=2, mode="continuous",
+                                         n_slots=6))
+    trajs = worker.rollout(tasks, jax.random.PRNGKey(7))
+    assert len(trajs) == 6
+    stats = worker.last_stats
+    # the pool could not hold 6 concurrent episodes: admission was capped
+    assert stats["n_slots"] < 6
+    assert stats["refills"] >= 4          # later tasks waited for freed blocks
+    assert stats["evictions"] == 0        # backpressure, not corruption
+    assert 0.0 < stats["cache_utilization"] <= 1.0
+    for a, b in zip(trajs, ref):
+        assert a.tokens() == b.tokens()
+        assert a.stop_reason == b.stop_reason
+
+
+def test_reference_decoder_maps_blocks_on_paged_session(gqa_setup):
+    """Regression: generate_reference must map decode-growth blocks like the
+    fused loop does — without that, tokens past the prompt's last allocated
+    block route to the trash block and silently vanish from attention (the
+    'parity oracle' would report false results on paged sessions)."""
+    cfg, model, params, tok = gqa_setup
+    eng = GenerationEngine(model, params, pad_id=tok.pad_id,
+                           stop_ids=(tok.eos_id,), max_len=96,
+                           temperature=1.0, cache_mode="paged", page_size=16)
+    prompt = tok.encode("abcd")          # 4 tokens: decode crosses block 0
+    rk = jax.random.split(jax.random.PRNGKey(5), 1)
+    s1 = eng.start([list(prompt)])
+    r1 = eng.generate(s1, 24, row_keys=rk)
+    s2 = eng.start([list(prompt)])
+    r2 = eng.generate_reference(s2, 24, row_keys=rk)
+    assert r1.token_lists() == r2.token_lists()
+    np.testing.assert_allclose(r1.logprob_lists()[0], r2.logprob_lists()[0],
+                               atol=1e-5)
+    assert s2.allocator.n_blocks[0] == s1.allocator.n_blocks[0] > 1
+
+
+def test_retired_lanes_release_blocks_at_tail(gqa_setup):
+    """Regression: a slot retired after the task queue drains must still
+    free its blocks (lane reset happens even with nothing left to admit) —
+    otherwise dead lanes pin pool blocks that live parked rows are waiting
+    for and they get spuriously evicted."""
+    cfg, model, params, tok = gqa_setup
+    env = SearchEnv(n_entities=20, seed=0)
+    eng = GenerationEngine(model, params, pad_id=tok.pad_id,
+                           stop_ids=(tok.eos_id,), max_len=512,
+                           cache_mode="paged", page_size=16, num_blocks=32)
+    sessions = []
+    orig_start = eng.start
+
+    def probing_start(contexts, **kw):
+        s = orig_start(contexts, **kw)
+        sessions.append(s)
+        return s
+
+    eng.start = probing_start
+    worker = RolloutWorker(eng, env, tok,
+                           RolloutConfig(max_turns=2, max_new_tokens=16,
+                                         group_size=2, mode="continuous",
+                                         n_slots=2))
+    trajs = worker.rollout(env.sample_tasks(2, seed=3),
+                           jax.random.PRNGKey(7))
+    assert len(trajs) == 4
+    assert len(sessions) == 1
+    assert sessions[0].allocator.used_count == 0   # every lane drained
+
+
+def test_pool_exhaustion_on_prefill_raises(gqa_setup):
+    """A prompt that cannot fit the whole pool must fail loudly, not wrap."""
+    cfg, model, params, tok = gqa_setup
+    eng = GenerationEngine(model, params, pad_id=tok.pad_id,
+                           stop_ids=(tok.eos_id,), max_len=256,
+                           cache_mode="paged", page_size=16, num_blocks=2)
+    with pytest.raises(RuntimeError, match="paged KV pool exhausted"):
+        eng.start([list(range(60))])
+
+
+def test_block_allocator_accounting():
+    a = BlockAllocator(num_blocks=6, block_size=8, batch=3,
+                       max_blocks_per_row=4)
+    assert a.blocks_for(0) == 0 and a.blocks_for(1) == 1
+    assert a.blocks_for(8) == 1 and a.blocks_for(9) == 2
+    assert a.ensure(0, 20) == 24 and a.n_blocks[0] == 3
+    assert a.ensure(1, 17) == 24 and a.free_count == 0
+    # pool exhausted: partial coverage reported, nothing corrupted
+    assert a.ensure(2, 10) == 0 and a.n_blocks[2] == 0
+    freed = a.free_rows([0])
+    assert len(freed) == 3 and a.free_count == 3
+    assert set(a.table[0]) == {-1}
+    # freed blocks are reusable
+    assert a.ensure(2, 10) == 16 and a.used_count == 5
+    assert a.peak_used == 6
+
+
+def test_paged_engine_rejects_window(gqa_setup):
+    cfg, model, params, tok = gqa_setup
+    with pytest.raises(ValueError, match="window"):
+        GenerationEngine(model, params, pad_id=tok.pad_id, stop_ids=(),
+                         max_len=64, cache_mode="paged", window=32)

@@ -387,6 +387,26 @@ def test_judge_reward_score_extraction(setup):
     assert judge.extract_score("garbage") == 0.0
 
 
+def test_judge_score_anchored_against_distractor_numbers(setup):
+    """Regression: the old parse prepended "score:" to the continuation and
+    searched, so ANY leading stray number ("\\n2 + 2 = 4 ...") parsed as the
+    score.  The parse must anchor to the start of the continuation (the
+    judge completing the prompt's trailing "Score:") or an explicit
+    Score:/Rating: restatement — never a free-floating number."""
+    cfg, model, params, tok, env, engine = setup
+    judge = ModelJudgeReward(engine, tok)
+    # leading number = the continuation of "... Score:"; later numbers lose
+    assert judge.extract_score(" 7/10. The rating: 3 criteria used") == 0.7
+    assert judge.extract_score("\nScore: 6\nNot 1995.") == 0.6
+    # no leading number: an explicit restatement anywhere wins ...
+    assert judge.extract_score(
+        "The answer mentions 1995 and 42 things.\nScore: 6") == 0.6
+    # ... but distractor numbers alone must not parse at all
+    assert judge.extract_score("It was released in 1995, then 42 more.") == 0.0
+    assert judge.extract_score("I liked the part about 2 + 2 = 4. "
+                               "No verdict.") == 0.0
+
+
 def test_judge_reward_runs_via_engine(setup):
     """Eq. 2 end-to-end: the judge model generates, a score is parsed."""
     cfg, model, params, tok, env, engine = setup

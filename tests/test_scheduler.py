@@ -175,6 +175,126 @@ def test_mid_round_absorption_keeps_rows_in_parse_set(setup):
         assert trajs[t].finished
 
 
+def test_round_budget_shrinks_with_parked_fraction(setup):
+    """Unit contract for the adaptive per-round decode budget: full turn
+    budget with nothing parked, proportional to the active fraction once
+    slots wait on tool futures, never below the floor, and disabled by
+    config."""
+    from repro.core.scheduler import MIN_ROUND_BUDGET, ContinuousScheduler
+    cfg, model, params, tok, env = setup
+    worker = _worker(setup, max_new_tokens=64)
+    sched = worker.scheduler
+    assert sched._supports_rounds            # real engine
+    assert sched._round_budget(4, 0) == 64
+    assert sched._round_budget(1, 3) == 16   # 25% active -> 25% budget
+    assert sched._round_budget(1, 7) == MIN_ROUND_BUDGET
+    worker.config.adaptive_budget = False
+    assert sched._round_budget(1, 7) == 64
+
+
+def test_decode_budget_adapts_while_slots_parked(setup):
+    """Satellite (d): with one slot parked on a slow tool and one decoding,
+    rounds must run with a shrunken budget (observations drain sooner), and
+    trajectories must still replay their scripts exactly — round-sliced
+    turns cannot change content."""
+    import re as _re
+    import time as _time
+    from repro.serving.engine import DecodeSession, GenerationResult
+    from repro.tools.envs import Env as BaseEnv
+    from repro.tools.manager import Qwen3ToolManager
+    from repro.tools.registry import ToolRegistry, ToolSpec
+    cfg, model, params, tok, env = setup
+
+    reg = ToolRegistry()
+
+    async def sleep(ms):
+        import asyncio
+        await asyncio.sleep(float(ms) / 1000.0)
+        return f"ok:{ms}"
+
+    reg.register(ToolSpec(name="sleep", fn=sleep,
+                          parameters={"ms": {"required": True}}))
+    slow_env = BaseEnv(reg, Qwen3ToolManager(reg, compact=True),
+                       max_tool_calls=8)
+
+    scripts = {0: ["<tool_call>sleep: 80</tool_call>", "<answer>t0</answer>"]}
+    for t in range(1, 7):
+        scripts[t] = [f"<answer>t{t}</answer>"]
+    task_re = _re.compile(r"task-(\d+)")
+
+    class Eng:
+        """Scripted double that *supports* round budgets (step_offsets in
+        generate's signature) and records the per-call budgets it sees."""
+        stop_ids = ()
+        max_len = 1 << 30
+
+        def __init__(self):
+            self.task, self.turn, self.fresh = [], [], set()
+            self.budgets_seen = []
+
+        def _tid(self, toks):
+            return int(task_re.search(tok.decode(list(toks))).group(1))
+
+        def start(self, contexts):
+            self.task = [self._tid(c) for c in contexts]
+            self.turn = [0] * len(contexts)
+            return DecodeSession(
+                cache=None,
+                lengths=np.array([len(c) for c in contexts]),
+                last_logits=None,
+                stopped=np.zeros(len(contexts), bool))
+
+        def generate(self, session, n, key=None, temperature=None,
+                     row_keys=None, step_offsets=None, row_budgets=None):
+            _time.sleep(0.01)
+            self.budgets_seen.append(int(n))
+            toks = []
+            for i in range(session.batch):
+                if session.stopped[i]:
+                    toks.append([])
+                    continue
+                s = scripts[self.task[i]]
+                toks.append(tok.encode(s[min(self.turn[i], len(s) - 1)]))
+                self.turn[i] += 1
+            lps = [np.full(len(t), -1.0, np.float32) for t in toks]
+            return GenerationResult.from_lists(toks, lps, pad_id=tok.pad_id)
+
+        def extend(self, session, lists):
+            pass
+
+        def extend_rows(self, session, rows, lists):
+            for r, t in zip(rows, lists):
+                r = int(r)
+                session.stopped[r] = False
+                if r in self.fresh:
+                    self.task[r] = self._tid(t)
+                    self.turn[r] = 0
+                    self.fresh.discard(r)
+
+        def reset_rows(self, session, rows):
+            for r in rows:
+                session.stopped[int(r)] = True
+                self.fresh.add(int(r))
+
+    eng = Eng()
+    worker = RolloutWorker(
+        eng, slow_env, tok,
+        RolloutConfig(max_turns=6, group_size=1, mode="continuous",
+                      n_slots=2, max_new_tokens=64))
+    tasks = [(f"task-{t}", f"t{t}") for t in range(7)]
+    trajs = worker.rollout(tasks, jax.random.PRNGKey(0))
+    # budget shrank while task 0 was parked (1 active / 2 occupied -> 32)
+    assert min(eng.budgets_seen) < 64, eng.budgets_seen
+    stats = worker.last_stats
+    assert stats["adaptive_rounds"] >= 1
+    assert stats["min_round_budget"] < 64
+    # content is untouched by round slicing
+    assert tok.decode(trajs[0].model_tokens()) == "".join(scripts[0][:2])
+    for t in range(1, 7):
+        assert tok.decode(trajs[t].model_tokens()) == scripts[t][0]
+        assert trajs[t].finished
+
+
 @pytest.mark.slow
 def test_trainer_logs_stop_reasons_and_scheduler_stats(setup):
     from repro.core.grpo import GRPOConfig
