@@ -1,0 +1,200 @@
+"""Sync handoff vs in-flight weight refresh (disaggregated trainer).
+
+The synchronous trainer serializes each iteration: rollout -> one fat
+learner update -> weight swap -> next rollout, so the learner's compute is
+dead time appended to every iteration.  The disaggregated trainer
+(``TrainerConfig.mode="async"``) consumes complete GRPO groups off the
+trajectory stream, runs micro-updates while the remaining rows are parked on
+tool futures (the executor's background loop keeps the I/O flying), and
+publishes refreshed params that the scheduler swaps in at its next round
+boundary — learner compute overlaps tool latency instead of extending the
+iteration.
+
+Setup mirrors bench_continuous_rollout: a scripted session-protocol engine
+(fixed decode cost per round) + heterogeneous ~50ms sleep tools, so both
+modes do identical rollout work and the measurement isolates the handoff
+discipline.  The learner's jitted train step is wrapped with a sleep
+proportional to the micro-batch rows (simulating a large model's per-row
+update cost; the tiny model's real update is ~free) — total simulated
+learner work is identical in both modes (same rows/iteration), only its
+placement differs.  The engine double carries a real WeightStore, so the
+async run exercises versioned publish/refresh and reports the observed
+staleness distribution.
+
+Writes ``results/BENCH_async.json``: iterations/sec for sync vs async,
+rollout-learner overlap, weight refreshes, and staleness stats.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.bench_continuous_rollout import (TOOL_TURNS, SimEngine,
+                                                 _SleepEnv)
+from repro.configs import get_config
+from repro.core.grpo import GRPOConfig
+from repro.core.rewards import RewardComposer, RuleReward
+from repro.core.rollout import RolloutConfig
+from repro.core.trainer import RLTrainer, TrainerConfig
+from repro.data.tokenizer import default_tokenizer
+from repro.models import Model
+from repro.optim.adamw import AdamWConfig
+from repro.serving.engine import WeightStore
+
+N_TASKS = 8
+GROUP_SIZE = 2
+N_SLOTS = 8
+LEARN_S_PER_ROW = 0.02           # simulated large-model update cost per row
+N_ITERS = 3                      # measured iterations (after warmup)
+WARMUP_ITERS = 1
+
+
+class VersionedSimEngine(SimEngine):
+    """The scripted engine with a real WeightStore bolted on, so the
+    scheduler's round-boundary refresh / per-token version stamping runs
+    exactly as it would against the real engine."""
+
+    def __init__(self, tok, params):
+        super().__init__(tok)
+        self.weights = WeightStore(params)
+
+    def publish(self, params) -> int:
+        return self.weights.publish(params)
+
+    def refresh_weights(self) -> int:
+        return self.weights.refresh()
+
+    @property
+    def active_version(self) -> int:
+        return self.weights.active
+
+    @property
+    def latest_version(self) -> int:
+        return self.weights.version
+
+    def pin_version(self, version: int) -> None:
+        self.weights.pin(version)
+
+    def unpin_version(self, version: int) -> None:
+        self.weights.unpin(version)
+
+
+class _TaskedSleepEnv(_SleepEnv):
+    """The sleep-tool env plus the task-sampling/scoring surface the
+    trainer drives."""
+
+    def sample_tasks(self, n, split="train", seed=0):
+        rng = np.random.RandomState(seed)
+        ids = rng.randint(0, 10_000, size=n)
+        return [(f"task-{int(i)}", f"done-{int(i)}") for i in ids]
+
+    def compute_score(self, traj, ground_truth):
+        # scripted rollouts answer "done-<task>"; exact match by design
+        text = "".join(str(t) for t in traj.model_tokens())
+        ok = float(traj.finished)
+        return {"score": ok, "exact_match": ok, "answer_format": ok,
+                "tool_format": 1.0, "_text_len": float(len(text))}
+
+
+def _make_trainer(mode: str, refresh_groups: int = 1) -> RLTrainer:
+    cfg = get_config("tiny")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = default_tokenizer(cfg.vocab_size)
+    env = _TaskedSleepEnv()
+    trainer = RLTrainer(
+        model, params, env, tok,
+        RewardComposer([(RuleReward(env), 1.0)]),
+        TrainerConfig(n_tasks_per_iter=N_TASKS, group_size=GROUP_SIZE,
+                      max_seq_len=256, mode=mode,
+                      refresh_groups=refresh_groups),
+        RolloutConfig(max_turns=TOOL_TURNS + 3, max_new_tokens=32,
+                      group_size=GROUP_SIZE, n_slots=N_SLOTS),
+        GRPOConfig(), AdamWConfig(),
+        engine=VersionedSimEngine(tok, params))
+    orig_step = trainer.learner._train_step
+
+    def step_with_cost(p, o, batch):
+        time.sleep(LEARN_S_PER_ROW * batch["tokens"].shape[0])
+        return orig_step(p, o, batch)
+
+    trainer.learner._train_step = step_with_cost
+    return trainer
+
+
+def _run_mode(mode: str, refresh_groups: int = 1) -> dict:
+    trainer = _make_trainer(mode, refresh_groups)
+    key = jax.random.PRNGKey(42)
+    for _ in range(WARMUP_ITERS):           # jit compile outside the timing
+        key, k = jax.random.split(key)
+        trainer.train_iteration(k)
+    walls, outs = [], []
+    for _ in range(N_ITERS):
+        key, k = jax.random.split(key)
+        t0 = time.monotonic()
+        outs.append(trainer.train_iteration(k))
+        walls.append(time.monotonic() - t0)
+    last = outs[-1]
+    res = {
+        "wall_s_min": min(walls),
+        "wall_s_mean": float(np.mean(walls)),
+        "iters_per_s": 1.0 / min(walls),
+        "model_tokens": float(np.mean([o["model_tokens"] for o in outs])),
+        "n_updates": last.get("train/n_updates", 1.0),
+        "weight_refreshes": last.get("rollout/weight_refreshes", 0.0),
+        "staleness_mean": float(np.mean(
+            [o.get("train/staleness_mean", 0.0) for o in outs])),
+        "staleness_max": float(np.max(
+            [o.get("train/staleness_max", 0.0) for o in outs])),
+        "staleness_p50": last.get("train/staleness_p50", 0.0),
+        "staleness_p90": last.get("train/staleness_p90", 0.0),
+        "learner_overlap_s": float(np.mean(
+            [o.get("train/learner_overlap_s", 0.0) for o in outs])),
+        "learner_overlap_frac": float(np.mean(
+            [o.get("train/learner_overlap_frac", 0.0) for o in outs])),
+        "pipelined_fraction": float(np.mean(
+            [o["reward/pipelined_fraction"] for o in outs])),
+    }
+    return res
+
+
+def run() -> dict:
+    out = {"sync": _run_mode("sync"),
+           "async": _run_mode("async", refresh_groups=1)}
+    out["speedup"] = (out["async"]["iters_per_s"]
+                      / max(out["sync"]["iters_per_s"], 1e-9))
+    out["config"] = {"n_tasks": N_TASKS, "group_size": GROUP_SIZE,
+                     "n_slots": N_SLOTS, "tool_turns": TOOL_TURNS,
+                     "learn_s_per_row": LEARN_S_PER_ROW,
+                     "n_iters": N_ITERS, "refresh_groups": 1}
+    return out
+
+
+def main():
+    r = run()
+    os.makedirs("results", exist_ok=True)
+    with open("results/BENCH_async.json", "w") as f:
+        json.dump(r, f, indent=2)
+    rows = []
+    for label in ("sync", "async"):
+        m = r[label]
+        print(f"bench_async_refresh,{label},wall={m['wall_s_min']:.3f}s,"
+              f"iters_per_s={m['iters_per_s']:.2f},"
+              f"overlap={m['learner_overlap_frac']:.2f},"
+              f"refreshes={m['weight_refreshes']:.0f},"
+              f"staleness_mean={m['staleness_mean']:.2f}")
+        rows.append((f"async_refresh_{label}", m["wall_s_min"] * 1e6,
+                     f"iters_per_s={m['iters_per_s']:.2f}"))
+    print(f"bench_async_refresh,speedup={r['speedup']:.2f}x,"
+          f"staleness_p90={r['async']['staleness_p90']:.1f}")
+    rows.append(("async_refresh_speedup", 0.0,
+                 f"{r['speedup']:.2f}x_vs_sync_handoff"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -8,12 +8,14 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bench_async_throughput, bench_continuous_rollout,
-                            bench_decode_throughput, bench_kernels,
-                            bench_paged_cache, bench_training_curve, roofline)
+    from benchmarks import (bench_async_refresh, bench_async_throughput,
+                            bench_continuous_rollout, bench_decode_throughput,
+                            bench_kernels, bench_paged_cache,
+                            bench_training_curve, roofline)
     all_rows = []
     for mod, label in ((bench_async_throughput, "table1_async_throughput"),
                        (bench_continuous_rollout, "continuous_rollout"),
+                       (bench_async_refresh, "async_refresh"),
                        (bench_decode_throughput, "decode_throughput"),
                        (bench_paged_cache, "paged_cache"),
                        (bench_kernels, "kernels"),

@@ -25,9 +25,15 @@ def _flatten(tree) -> dict:
 
 
 def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
-                    metadata: Optional[dict] = None) -> None:
+                    metadata: Optional[dict] = None,
+                    weight_version: Optional[int] = None) -> None:
+    """``weight_version`` persists the serving-side WeightStore counter so a
+    resumed run keeps version monotonicity (staleness accounting under
+    in-flight refresh stays correct across restarts)."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     payload = {"step": step, "metadata": metadata or {}}
+    if weight_version is not None:
+        payload["weight_version"] = int(weight_version)
     for name, tree in (("params", params), ("opt_state", opt_state)):
         if tree is None:
             continue
@@ -61,4 +67,8 @@ def load_checkpoint(path: str, params_template, opt_template=None):
     opt_state = None
     if opt_template is not None and "opt_state" in payload:
         opt_state = restore(opt_template, payload["opt_state"])
-    return params, opt_state, payload["step"], payload.get("metadata", {})
+    metadata = dict(payload.get("metadata", {}))
+    if "weight_version" in payload:
+        # surfaced through metadata so the 4-tuple return stays stable
+        metadata["weight_version"] = int(payload["weight_version"])
+    return params, opt_state, payload["step"], metadata

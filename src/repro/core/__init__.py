@@ -8,12 +8,14 @@ from repro.core.rewards import (ModelJudgeReward, RewardComposer, RuleReward,
                                 ToolVerifyReward)
 from repro.core.rollout import RolloutConfig, RolloutWorker
 from repro.core.scheduler import ContinuousScheduler
-from repro.core.trainer import RLTrainer, TrainerConfig
+from repro.core.trainer import (Learner, RLTrainer, RolloutProducer,
+                                TrainerConfig)
 
 __all__ = [
     "AsyncToolExecutor", "SerialToolExecutor", "GRPOConfig", "grpo_advantages",
     "grpo_loss", "make_grpo_train_step", "Role", "STOP_REASONS", "Segment",
     "Trajectory", "to_training_batch", "ModelJudgeReward", "RewardComposer",
     "RuleReward", "ToolVerifyReward", "RolloutConfig", "RolloutWorker",
-    "ContinuousScheduler", "RLTrainer", "TrainerConfig",
+    "ContinuousScheduler", "Learner", "RLTrainer", "RolloutProducer",
+    "TrainerConfig",
 ]

@@ -25,6 +25,12 @@ class GRPOConfig:
     micro_batch: int = 0              # 0 = no gradient accumulation
     accum_unroll: bool = False        # python-loop accumulation (dry-run aux
                                       # compiles: exact cost_analysis)
+    max_staleness: int = -1           # in-flight refresh: tokens sampled
+                                      # more than this many weight versions
+                                      # behind the learner are masked out of
+                                      # the loss (-1 = keep all; the clipped
+                                      # importance ratio already corrects
+                                      # mild off-policyness)
 
 
 # --------------------------------------------------------------- advantages
@@ -87,6 +93,15 @@ def grpo_loss(logits: jnp.ndarray, batch: dict, cfg: GRPOConfig,
     batch: tokens (B,S) int32; loss_mask (B,S) in {0,1} — 1 on MODEL tokens;
     advantages (B,); old_logprobs (B,S) — logprob recorded at sampling time,
     0 elsewhere; ref_logprobs (B,S) — reference-policy logprobs (0 => no KL).
+
+    Optional ``staleness`` (B,S) int32: per-token weight-version lag
+    (learner version at update time minus the version that sampled the
+    token; in-flight refresh makes this > 0 for trajectories that straddled
+    a publish).  The importance ratio against the *recorded* ``old_logprobs``
+    is already exact for any lag; staleness additionally (a) masks tokens
+    beyond ``cfg.max_staleness`` out of the loss, and (b) splits
+    ``clip_frac`` into fresh/stale so off-policy drift is observable.
+    Absent or all-zero staleness reproduces the synchronous loss bit-for-bit.
     """
     lp = (token_logprobs_fused(logits, batch["tokens"]) if use_fused
           else token_logprobs(logits, batch["tokens"]))          # (B,S-1)
@@ -94,6 +109,13 @@ def grpo_loss(logits: jnp.ndarray, batch: dict, cfg: GRPOConfig,
     adv = batch["advantages"][:, None].astype(jnp.float32)
     old = batch["old_logprobs"][:, 1:].astype(jnp.float32)
     ref = batch["ref_logprobs"][:, 1:].astype(jnp.float32)
+    stale = (batch["staleness"][:, 1:].astype(jnp.float32)
+             if "staleness" in batch
+             else jnp.zeros_like(mask))
+    if cfg.max_staleness >= 0:
+        # per-token version mask: drop tokens whose sampling policy lags
+        # the learner by more than the configured budget
+        mask = mask * (stale <= float(cfg.max_staleness)).astype(jnp.float32)
 
     ratio = jnp.exp(lp - old)
     unclipped = ratio * adv
@@ -109,14 +131,26 @@ def grpo_loss(logits: jnp.ndarray, batch: dict, cfg: GRPOConfig,
     pg_loss = -(surrogate * mask).sum() / denom
     kl_loss = (kl * mask).sum() / denom
     loss = pg_loss + cfg.kl_coef * kl_loss + cfg.aux_coef * aux
+    clipped_tok = (jnp.abs(ratio - 1) > cfg.clip_eps).astype(jnp.float32)
+    fresh_m = mask * (stale == 0)
+    stale_m = mask * (stale > 0)
     metrics = {
         "loss": loss,
         "pg_loss": pg_loss,
         "kl": kl_loss,
         "aux": aux,
         "ratio_mean": (ratio * mask).sum() / denom,
-        "clip_frac": ((jnp.abs(ratio - 1) > cfg.clip_eps) * mask).sum() / denom,
+        "clip_frac": (clipped_tok * mask).sum() / denom,
         "entropy_proxy": -(lp * mask).sum() / denom,
+        # in-flight refresh observability: version-lag distribution over the
+        # tokens in the loss, and clip_frac split by freshness
+        "staleness_mean": (stale * mask).sum() / denom,
+        "staleness_max": (stale * mask).max(),
+        "staleness_frac": stale_m.sum() / denom,
+        "clip_frac_fresh": ((clipped_tok * fresh_m).sum()
+                            / jnp.maximum(fresh_m.sum(), 1.0)),
+        "clip_frac_stale": ((clipped_tok * stale_m).sum()
+                            / jnp.maximum(stale_m.sum(), 1.0)),
     }
     return loss, metrics
 
@@ -168,7 +202,9 @@ def make_grpo_train_step(model, opt_cfg, grpo_cfg: GRPOConfig,
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
             zero_m = {k_: jnp.zeros((), jnp.float32) for k_ in
                       ("loss", "pg_loss", "kl", "aux", "ratio_mean",
-                       "clip_frac", "entropy_proxy")}
+                       "clip_frac", "entropy_proxy", "staleness_mean",
+                       "staleness_max", "staleness_frac",
+                       "clip_frac_fresh", "clip_frac_stale")}
             if grpo_cfg.accum_unroll:
                 carry = (zero_g, zero_m)
                 for i in range(k):

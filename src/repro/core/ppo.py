@@ -26,6 +26,10 @@ class PPOConfig:
     gamma: float = 1.0
     lam: float = 0.95
     aux_coef: float = 0.001
+    max_staleness: int = -1           # mask tokens sampled more than this
+                                      # many weight versions behind the
+                                      # learner (-1 = keep all); see
+                                      # core/grpo.py — same semantics
 
 
 def value_head_specs(d_model: int) -> dict:
@@ -75,10 +79,21 @@ def gae_advantages(values: jnp.ndarray, rewards: jnp.ndarray,
 
 
 def ppo_loss(logits, hidden, vparams, batch, cfg: PPOConfig, aux=0.0):
-    """batch: tokens, loss_mask, old_logprobs, old_values (B,S), rewards (B,)."""
+    """batch: tokens, loss_mask, old_logprobs, old_values (B,S), rewards (B,).
+
+    Optional ``staleness`` (B,S): per-token weight-version lag under
+    in-flight refresh — same contract as :func:`repro.core.grpo.grpo_loss`
+    (version mask beyond ``cfg.max_staleness``, clip_frac split by
+    freshness; absent/zero staleness reproduces the synchronous loss).
+    """
     lp = token_logprobs(logits, batch["tokens"])                  # (B,S-1)
     mask = batch["loss_mask"][:, 1:].astype(jnp.float32)
     old = batch["old_logprobs"][:, 1:].astype(jnp.float32)
+    stale = (batch["staleness"][:, 1:].astype(jnp.float32)
+             if "staleness" in batch
+             else jnp.zeros_like(mask))
+    if cfg.max_staleness >= 0:
+        mask = mask * (stale <= float(cfg.max_staleness)).astype(jnp.float32)
     values = value_head_apply(vparams, hidden)[:, :-1]            # V at prefix t
     old_values = batch["old_values"][:, :-1].astype(jnp.float32)
 
@@ -104,10 +119,18 @@ def ppo_loss(logits, hidden, vparams, batch, cfg: PPOConfig, aux=0.0):
     ent = -(lp * mask).sum() / denom
     loss = pg_loss + cfg.value_coef * v_loss - cfg.entropy_coef * ent \
         + cfg.aux_coef * aux
+    clipped_tok = (jnp.abs(ratio - 1) > cfg.clip_eps).astype(jnp.float32)
+    fresh_m = mask * (stale == 0)
+    stale_m = mask * (stale > 0)
     return loss, {"loss": loss, "pg_loss": pg_loss, "v_loss": v_loss,
                   "entropy_proxy": ent,
-                  "clip_frac": ((jnp.abs(ratio - 1) > cfg.clip_eps) * mask
-                                ).sum() / denom}
+                  "clip_frac": (clipped_tok * mask).sum() / denom,
+                  "staleness_mean": (stale * mask).sum() / denom,
+                  "staleness_max": (stale * mask).max(),
+                  "clip_frac_fresh": ((clipped_tok * fresh_m).sum()
+                                      / jnp.maximum(fresh_m.sum(), 1.0)),
+                  "clip_frac_stale": ((clipped_tok * stale_m).sum()
+                                      / jnp.maximum(stale_m.sum(), 1.0))}
 
 
 def make_ppo_train_step(model, opt_cfg, ppo_cfg: PPOConfig):

@@ -19,9 +19,9 @@ from repro.core.mdp import Trajectory
 class RewardFn:
     name = "reward"
     # Streaming-safe rewards can score one trajectory at a time, the moment
-    # it retires from the continuous scheduler, without contending for the
-    # rollout engine (rule functions yes; judge models need a decode batch
-    # of their own, so they score after the rollout instead).
+    # it retires from the continuous scheduler, without corrupting the
+    # rollout engine's session state (rule functions trivially; the judge
+    # because each scoring call opens a fresh DecodeSession of its own).
     streaming_safe = False
 
     def __call__(self, trajs: List[Trajectory], ground_truths: Sequence) -> np.ndarray:
@@ -53,8 +53,18 @@ class ModelJudgeReward(RewardFn):
     (the veRL reward_rollout_wg analogue; the paper deploys QwQ-32B, here any
     configured Model).  The criterion c is the prompt template; the score is
     parsed from the judge's output ("Score: <0-10>").
+
+    Streaming-safe: every call opens its *own* :class:`DecodeSession` on the
+    judge engine (sessions own their cache, so they never disturb a rollout
+    session in flight — even when ``judge_engine`` is the rollout engine
+    object).  The trainer's stream path therefore scores retired
+    trajectories one at a time while other rows still decode and tool
+    futures fly, pipelining judge decoding with rollout the way
+    ``RewardComposer.score_one`` already pipelines rule rewards
+    (``reward/pipelined_fraction`` counts both).
     """
     name = "judge"
+    streaming_safe = True
     SCORE_RE = re.compile(r"(?:score|rating)\s*[:=]?\s*([0-9]+(?:\.[0-9]+)?)",
                           re.I)
     LEAD_RE = re.compile(r"\s*(?:(?:score|rating)\s*[:=]?\s*)?"

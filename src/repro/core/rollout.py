@@ -112,6 +112,8 @@ class RolloutWorker:
         batch generates, barriers on the executor, prefills together.  Kept
         as the scheduler's parity oracle and the benchmark baseline."""
         gs = self.config.group_size if group_size is None else group_size
+        versioned = hasattr(self.engine, "refresh_weights")
+        ver = int(getattr(self.engine, "active_version", 0))
         trajs: List[Trajectory] = []
         for gid, (q, gt) in enumerate(tasks):
             prompt_ids = self.tok.encode(self.env.manager.get_prompt(q),
@@ -119,9 +121,11 @@ class RolloutWorker:
             for _ in range(gs):
                 tr = Trajectory(group_id=gid,
                                 meta={"question": q, "ground_truth": gt,
-                                      "logprobs": []})
+                                      "logprobs": [], "policy_versions": [],
+                                      "turn_versions": []})
                 tr.append(Role.PROMPT, prompt_ids)
                 tr.meta["logprobs"].extend([0.0] * len(prompt_ids))
+                tr.meta["policy_versions"].extend([ver] * len(prompt_ids))
                 trajs.append(tr)
         if not trajs:
             return trajs
@@ -133,7 +137,10 @@ class RolloutWorker:
         traj_keys = jax.random.split(key, len(trajs))
 
         for turn in range(self.config.max_turns):
-            # ---- Generate
+            # ---- Generate (turn boundary doubles as the weight-refresh
+            # sync point, mirroring the scheduler's round boundary)
+            if versioned:
+                ver = int(self.engine.refresh_weights())
             row_keys = _fold_rows(
                 traj_keys, jnp.full((len(trajs),), turn, jnp.int32))
             res = self.engine.generate(
@@ -151,6 +158,8 @@ class RolloutWorker:
                 tr.append(Role.MODEL, row_toks)
                 tr.meta["logprobs"].extend(
                     [float(x) for x in res.logprobs[i, :n]])
+                tr.meta["policy_versions"].extend([ver] * n)
+                tr.meta["turn_versions"].append(ver)
                 text = self.tok.decode(row_toks)
                 calls, answer = self.env.manager.parse_response(text)
                 over_budget = tr.n_tool_calls + len(calls) > self.env.max_tool_calls
@@ -179,6 +188,7 @@ class RolloutWorker:
                     ids = self.tok.encode(obs_text)
                     tr.append(Role.OBSERVATION, ids)
                     tr.meta["logprobs"].extend([0.0] * len(ids))
+                    tr.meta["policy_versions"].extend([ver] * len(ids))
                     obs_tokens.append(ids)
                 else:
                     obs_tokens.append([])

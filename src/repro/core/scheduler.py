@@ -59,6 +59,17 @@ absorbable), the longest pending row is retired as ``max_len`` — the
 eviction analogue of vLLM preemption.  Mean pool utilization is reported as
 ``cache_utilization``.
 
+In-flight weight refresh (``engine.publish``/``refresh_weights``): a learner
+may publish updated params at any time; the scheduler swaps them in **only
+at a round boundary** (top of the decode loop), so a version change can
+never land mid-round.  Every sampled token is stamped with the weight
+version that produced it (``Trajectory.meta["policy_versions"]``, parallel
+to ``meta["logprobs"]``; per-turn summary in ``meta["turn_versions"]``) —
+a turn that spans a refresh carries mixed versions, which the GRPO/PPO
+losses consume as a per-token staleness signal.  Versions referenced by an
+in-flight trajectory stay pinned in the engine's WeightStore until the
+trajectory retires.
+
 Determinism: each trajectory owns a PRNG stream (``split(key, n_trajs)``);
 its k-th decode turn samples from ``fold_in(traj_key, k)`` folded again per
 step inside the engine.  Sampling is therefore independent of which rows
@@ -71,7 +82,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
-import inspect
 import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -114,6 +124,9 @@ class _Job:
     traj: Trajectory
     prompt_ids: List[int]
     key: jax.Array                  # per-trajectory PRNG stream
+    versions: set = dataclasses.field(default_factory=set)
+    #                                 weight versions that sampled any of this
+    #                                 trajectory's tokens (pinned until retire)
 
 
 @dataclasses.dataclass
@@ -128,6 +141,8 @@ class _Slot:
     calls: list = dataclasses.field(default_factory=list)
     turn_toks: list = dataclasses.field(default_factory=list)   # mid-turn buf
     turn_lps: list = dataclasses.field(default_factory=list)
+    turn_vers: list = dataclasses.field(default_factory=list)   # per-token
+    #                                  weight version (parallel to turn_toks)
     pending_obs: Optional[list] = None   # landed obs waiting for cache blocks
     lane_clean: bool = True         # cache lane reset since the last occupant
 
@@ -146,14 +161,17 @@ class ContinuousScheduler:
         self.executor = executor
         self.n_slots = n_slots or getattr(config, "n_slots", 0)
         self.last_stats: Dict[str, float] = {}
-        # Engine doubles in tests expose the pre-round generate signature;
-        # round-sliced turns (adaptive budgets, step_offsets) need the real
-        # engine's controls, so detect support once.
-        try:
-            params = inspect.signature(engine.generate).parameters
-            self._supports_rounds = "step_offsets" in params
-        except (TypeError, ValueError):
-            self._supports_rounds = False
+        # Round-sliced turns (adaptive budgets, step_offsets) need the real
+        # engine's controls.  The engine declares support via an explicit
+        # capability flag — engines/doubles without the attribute are driven
+        # turn-per-round (no signature probing: a double may *accept*
+        # **kwargs without honouring the round contract).
+        self._supports_rounds = bool(getattr(engine, "supports_rounds",
+                                             False))
+        # Versioned weights (in-flight refresh): the scheduler swaps to the
+        # latest published params only between decode rounds and stamps
+        # every sampled token with the version that produced it.
+        self._versioned = hasattr(engine, "refresh_weights")
 
     # ------------------------------------------------------------------ API
     def run(self, tasks: Sequence[Tuple[str, object]], key: jax.Array,
@@ -192,7 +210,8 @@ class ContinuousScheduler:
                  "min_round_budget": float(self.config.max_new_tokens),
                  "adaptive_rounds": 0.0, "admission_deferrals": 0.0,
                  "starved_rounds": 0.0, "evictions": 0.0,
-                 "util_sum": 0.0, "util_rounds": 0.0, "util_peak": 0.0}
+                 "util_sum": 0.0, "util_rounds": 0.0, "util_peak": 0.0,
+                 "weight_refreshes": 0.0}
         t_start = time.monotonic()
         retired: List[Trajectory] = []
         to_refill: List[_Slot] = []
@@ -202,12 +221,18 @@ class ContinuousScheduler:
             if slot.turn_toks:          # flush a partial mid-turn buffer
                 tr.append(Role.MODEL, slot.turn_toks)
                 tr.meta["logprobs"].extend(slot.turn_lps)
+                tr.meta["policy_versions"].extend(slot.turn_vers)
+                tr.meta["turn_versions"].append(slot.turn_vers[-1])
                 stats["model_tokens"] += len(slot.turn_toks)
+            if self._versioned:         # release this trajectory's pins
+                for v in slot.job.versions:
+                    self.engine.unpin_version(v)
             tr.stop_reason = reason
             tr.finished = finished
             retired.append(tr)
             slot.future, slot.calls = None, []
             slot.turn_toks, slot.turn_lps, slot.pending_obs = [], [], None
+            slot.turn_vers = []
             slot.job, slot.state = None, SlotState.FREE
             slot.lane_clean = False
             session.stopped[slot.row] = True
@@ -267,6 +292,14 @@ class ContinuousScheduler:
             # and release any still-parked futures from the executor
             if by_future and hasattr(self.executor, "forget"):
                 self.executor.forget(by_future)
+            if self._versioned:
+                # abandoned mid-stream: release weight pins of occupants
+                # that never retired, so no version leaks in the store
+                for slot in slots:
+                    if slot.job is not None and slot.job.versions:
+                        for v in slot.job.versions:
+                            self.engine.unpin_version(v)
+                        slot.job.versions = set()
             wall = time.monotonic() - t_start
             self.last_stats = {
                 "wall_s": wall,
@@ -286,6 +319,7 @@ class ContinuousScheduler:
                 "admission_deferrals": stats["admission_deferrals"],
                 "starved_rounds": stats["starved_rounds"],
                 "evictions": stats["evictions"],
+                "weight_refreshes": stats["weight_refreshes"],
             }
             if stats["util_rounds"]:
                 self.last_stats["cache_utilization"] = (
@@ -343,6 +377,8 @@ class ContinuousScheduler:
                     tr = slot.job.traj
                     tr.append(Role.OBSERVATION, ids)
                     tr.meta["logprobs"].extend([0.0] * len(ids))
+                    tr.meta["policy_versions"].extend(
+                        [self._active_version()] * len(ids))
                     rows.append(slot.row)
                     obs_lists.append(ids)
                     slot.pending_obs, slot.future, slot.calls = None, None, []
@@ -362,6 +398,17 @@ class ContinuousScheduler:
                         # nothing left alive can free — evict the longest
                         self._evict(session, slots, retire, stats)
                     continue
+
+            # Round boundary: swap to the latest published weights (if a
+            # learner staged any since the previous round).  The swap can
+            # only happen HERE — never inside a round — so every token this
+            # round samples is attributable to exactly one version.
+            ver = 0
+            if self._versioned:
+                prev_ver = int(self.engine.active_version)
+                ver = int(self.engine.refresh_weights())
+                if ver != prev_ver:
+                    stats["weight_refreshes"] += 1
 
             stats["rounds"] += 1
             stats["slot_rounds"] += len(slots)
@@ -413,6 +460,12 @@ class ContinuousScheduler:
                                           .tolist())
                     slot.turn_lps.extend(
                         float(x) for x in res.logprobs[slot.row, :n_tok])
+                    slot.turn_vers.extend([ver] * n_tok)
+                    if self._versioned and ver not in slot.job.versions:
+                        # pin the sampling version until this trajectory
+                        # retires (its old_logprobs reference these params)
+                        self.engine.pin_version(ver)
+                        slot.job.versions.add(ver)
                     progress = True
                 # A logical turn ends on a stop id, the full turn budget, or
                 # an exhausted context; otherwise the row stays mid-turn and
@@ -427,8 +480,11 @@ class ContinuousScheduler:
                 tr = slot.job.traj
                 tr.append(Role.MODEL, row_toks)
                 tr.meta["logprobs"].extend(slot.turn_lps)
+                tr.meta["policy_versions"].extend(slot.turn_vers)
+                tr.meta["turn_versions"].append(slot.turn_vers[-1])
                 stats["model_tokens"] += len(row_toks)
                 slot.turn_toks, slot.turn_lps = [], []
+                slot.turn_vers = []
                 slot.turn_idx += 1
                 text = self.tok.decode(row_toks)
                 calls, answer = self.env.manager.parse_response(text)
@@ -464,10 +520,16 @@ class ContinuousScheduler:
                     no_progress = 0
 
     # ------------------------------------------------------------- internals
+    def _active_version(self) -> int:
+        """Weight version currently serving decode (0 for unversioned
+        engine doubles)."""
+        return (int(self.engine.active_version) if self._versioned else 0)
+
     def _build_jobs(self, tasks, key, gs) -> List[_Job]:
         jobs: List[_Job] = []
         n = len(tasks) * gs
         keys = jax.random.split(key, max(n, 1))
+        ver = self._active_version()
         for gid, (q, gt) in enumerate(tasks):
             prompt_ids = self.tok.encode(self.env.manager.get_prompt(q),
                                          add_bos=True)
@@ -475,9 +537,15 @@ class ContinuousScheduler:
                 tr = Trajectory(group_id=gid,
                                 meta={"question": q, "ground_truth": gt,
                                       "logprobs": [],
+                                      "policy_versions": [],
+                                      "turn_versions": [],
                                       "job_index": len(jobs)})
                 tr.append(Role.PROMPT, prompt_ids)
                 tr.meta["logprobs"].extend([0.0] * len(prompt_ids))
+                # prompt tokens are not sampled; stamped with the version at
+                # job-build time purely to keep the array parallel to
+                # ``logprobs`` (they are loss-masked out downstream)
+                tr.meta["policy_versions"].extend([ver] * len(prompt_ids))
                 jobs.append(_Job(index=len(jobs), traj=tr,
                                  prompt_ids=list(prompt_ids),
                                  key=keys[len(jobs)]))

@@ -46,6 +46,16 @@ logical turn can be split across several ``generate`` calls without changing
 which random numbers each token draws — row ``b``'s i-th turn token always
 samples from ``fold_in(row_keys[b], i)`` no matter how the calls are sliced.
 
+Disaggregated trainer/engine (core/trainer.py ``mode="async"``): the engine
+owns a :class:`WeightStore` of *versioned* param handles.  A learner calls
+``publish(params) -> version`` at any time; the staged version becomes the
+decode params only when ``refresh_weights()`` is called — the continuous
+scheduler invokes it **between decode rounds**, so a version swap can never
+land mid-round and every sampled token is attributable to exactly one
+version (``active_version``).  Old versions stay pinned
+(``pin_version``/``unpin_version``) while in-flight trajectories reference
+them and are dropped once the last reference retires.
+
 ``cache_mode="paged"`` switches the KV layout from per-row contiguous lanes
 to a global block pool + per-row block tables (models/attention.py): a
 :class:`BlockAllocator` hands out fixed-size token blocks on
@@ -74,6 +84,91 @@ BUCKET = 32
 
 def _bucket(n: int) -> int:
     return max(BUCKET, ((n + BUCKET - 1) // BUCKET) * BUCKET)
+
+
+class WeightStore:
+    """Versioned param handles for in-flight weight refresh.
+
+    The learner *publishes* new params (staging them as ``version``, the
+    latest); the serving side *refreshes* at a round boundary, swapping
+    ``active`` to the latest staged version.  Versions referenced by
+    in-flight trajectories are pinned; an unpinned version that is neither
+    active nor latest is dropped immediately (in a multi-host deployment
+    this is where its device buffers would be freed).
+
+    Version numbers are monotone across the store's lifetime; a resumed run
+    re-bases the counter via :meth:`set_version` so staleness metrics stay
+    meaningful across restarts (checkpoint/checkpointer.py persists it).
+    """
+
+    def __init__(self, params, version: int = 0):
+        self._store = {int(version): params}
+        self._pins: dict = {}
+        self.version = int(version)     # latest published
+        self.active = int(version)      # currently serving decode
+
+    # ------------------------------------------------------------ handles
+    @property
+    def active_params(self):
+        return self._store[self.active]
+
+    @property
+    def latest_params(self):
+        return self._store[self.version]
+
+    def get(self, version: int):
+        return self._store[int(version)]
+
+    @property
+    def n_retained(self) -> int:
+        return len(self._store)
+
+    # ------------------------------------------------------------ lifecycle
+    def publish(self, params) -> int:
+        """Stage ``params`` as the next version (does NOT change the active
+        decode params — that happens at the next :meth:`refresh`)."""
+        self.version += 1
+        self._store[self.version] = params
+        self._gc()
+        return self.version
+
+    def refresh(self) -> int:
+        """Swap the active decode params to the latest published version
+        (round-boundary sync point); returns the active version."""
+        if self.active != self.version:
+            self.active = self.version
+            self._gc()
+        return self.active
+
+    def pin(self, version: int) -> None:
+        v = int(version)
+        if v not in self._store:
+            raise KeyError(f"weight version {v} not retained")
+        self._pins[v] = self._pins.get(v, 0) + 1
+
+    def unpin(self, version: int) -> None:
+        v = int(version)
+        n = self._pins.get(v, 0) - 1
+        if n <= 0:
+            self._pins.pop(v, None)
+        else:
+            self._pins[v] = n
+        self._gc()
+
+    def set_version(self, version: int) -> None:
+        """Re-base the counter (checkpoint restore): the current latest
+        params become ``version`` and every older handle is dropped."""
+        if self._pins:
+            raise RuntimeError("cannot re-base WeightStore with pinned "
+                               f"versions: {sorted(self._pins)}")
+        params = self.latest_params
+        self._store = {int(version): params}
+        self.version = self.active = int(version)
+
+    def _gc(self) -> None:
+        keep = {self.active, self.version} | set(self._pins)
+        for v in [v for v in self._store if v not in keep]:
+            del self._store[v]
 
 
 class BlockAllocator:
@@ -202,6 +297,12 @@ class DecodeSession:
 
 
 class GenerationEngine:
+    # Capability flag: this engine's ``generate`` accepts the round-slicing
+    # controls (``step_offsets``/``row_budgets``), so the continuous
+    # scheduler may split a logical turn across several calls.  Engine
+    # doubles that lack the attribute are driven turn-per-round.
+    supports_rounds = True
+
     def __init__(self, model: Model, params, pad_id: int, stop_ids: Sequence[int],
                  max_len: int = 1024, temperature: float = 1.0,
                  window: int = 0, cache_mode: str = "contiguous",
@@ -211,7 +312,7 @@ class GenerationEngine:
         ``max_len`` worth per row, i.e. the contiguous footprint — pass less
         to actually oversubscribe).  Requires window=0."""
         self.model = model
-        self.params = params
+        self.weights = WeightStore(params)
         self.pad_id = pad_id
         self.stop_ids = tuple(stop_ids)
         self.max_len = max_len
@@ -228,6 +329,45 @@ class GenerationEngine:
         self._decode_jit = jax.jit(self._decode_impl)
         self._loop_jit = jax.jit(self._decode_loop_impl,
                                  static_argnames=("T", "per_row"))
+
+    # --------------------------------------------------------- weight store
+    @property
+    def params(self):
+        """The *active* decode params (the version the next round samples
+        from).  Assignment keeps the legacy synchronous semantics: publish
+        AND refresh immediately, so the new params take effect on the very
+        next engine call — each assignment is one policy-version bump."""
+        return self.weights.active_params
+
+    @params.setter
+    def params(self, new_params) -> None:
+        self.weights.publish(new_params)
+        self.weights.refresh()
+
+    def publish(self, params) -> int:
+        """Stage refreshed params (learner side).  Decoding keeps using the
+        previous version until :meth:`refresh_weights` is called at a round
+        boundary; returns the new version number."""
+        return self.weights.publish(params)
+
+    def refresh_weights(self) -> int:
+        """Round-boundary sync point: swap active decode params to the
+        latest published version; returns the active version."""
+        return self.weights.refresh()
+
+    @property
+    def active_version(self) -> int:
+        return self.weights.active
+
+    @property
+    def latest_version(self) -> int:
+        return self.weights.version
+
+    def pin_version(self, version: int) -> None:
+        self.weights.pin(version)
+
+    def unpin_version(self, version: int) -> None:
+        self.weights.unpin(version)
 
     # ------------------------------------------------------------- paged API
     def blocks_for(self, n_tokens: int) -> int:

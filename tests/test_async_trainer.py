@@ -1,0 +1,411 @@
+"""Disaggregated trainer/engine: WeightStore lifecycle, in-flight weight
+refresh at round boundaries, per-trajectory policy versioning, sync/async
+parity, staleness-aware losses, checkpoint version persistence, evaluate
+seed threading."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.grpo import GRPOConfig, grpo_loss, token_logprobs
+from repro.core.rewards import RewardComposer, RuleReward
+from repro.core.rollout import RolloutConfig, RolloutWorker
+from repro.core.trainer import RLTrainer, TrainerConfig
+from repro.data.tokenizer import default_tokenizer
+from repro.models import Model
+from repro.optim.adamw import AdamWConfig
+from repro.serving.engine import GenerationEngine, WeightStore
+from repro.tools.search_env import SearchEnv
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = default_tokenizer(cfg.vocab_size)
+    env = SearchEnv(n_entities=30, seed=0)
+    return cfg, model, params, tok, env
+
+
+def _trainer(setup, mode="sync", refresh_groups=1, composer=None,
+             n_tasks=2, group_size=2, **rollout_kw):
+    cfg, model, params, tok, env = setup
+    rkw = dict(max_turns=2, max_new_tokens=8, group_size=group_size)
+    rkw.update(rollout_kw)
+    return RLTrainer(
+        model, params, env, tok,
+        composer or RewardComposer([(RuleReward(env), 1.0)]),
+        TrainerConfig(n_tasks_per_iter=n_tasks, group_size=group_size,
+                      max_seq_len=256, mode=mode,
+                      refresh_groups=refresh_groups),
+        RolloutConfig(**rkw), GRPOConfig(), AdamWConfig())
+
+
+# ---------------------------------------------------------------- WeightStore
+def test_weightstore_publish_refresh_pin_gc():
+    ws = WeightStore({"w": 0})
+    assert ws.version == ws.active == 0
+    assert ws.publish({"w": 1}) == 1
+    assert ws.active == 0                    # staged, not swapped
+    assert ws.active_params == {"w": 0} and ws.latest_params == {"w": 1}
+    ws.pin(0)
+    assert ws.refresh() == 1
+    assert ws.n_retained == 2                # 0 pinned, 1 active+latest
+    assert ws.publish({"w": 2}) == 2
+    assert ws.refresh() == 2
+    assert ws.n_retained == 2                # unpinned v1 was dropped
+    assert ws.get(0) == {"w": 0}
+    ws.unpin(0)
+    assert ws.n_retained == 1                # only the active/latest survives
+    with pytest.raises(KeyError):
+        ws.pin(1)                            # gc'd version cannot be pinned
+    with pytest.raises(KeyError):
+        ws.pin(99)
+
+
+def test_weightstore_refcounted_pins_and_rebase():
+    ws = WeightStore({"w": 0})
+    ws.pin(0)
+    ws.pin(0)                                # two in-flight trajectories
+    ws.publish({"w": 1})
+    ws.refresh()
+    ws.unpin(0)
+    assert ws.n_retained == 2                # still pinned once
+    with pytest.raises(RuntimeError):
+        ws.set_version(10)                   # cannot re-base with pins
+    ws.unpin(0)
+    ws.set_version(10)                       # checkpoint-restore re-base
+    assert ws.version == ws.active == 10
+    assert ws.active_params == {"w": 1}
+    assert ws.n_retained == 1
+
+
+def test_engine_publish_stages_refresh_swaps(setup):
+    cfg, model, params, tok, env = setup
+    engine = GenerationEngine(model, params, pad_id=tok.pad_id,
+                              stop_ids=(tok.eos_id,), max_len=128)
+    assert engine.supports_rounds
+    assert engine.active_version == engine.latest_version == 0
+    p2 = jax.tree_util.tree_map(lambda a: a + 1, params)
+    assert engine.publish(p2) == 1
+    assert engine.active_version == 0        # decode still on v0
+    assert engine.params is engine.weights.get(0)
+    assert engine.refresh_weights() == 1
+    assert engine.params is p2
+    # legacy setter = publish + immediate refresh (sync handoff)
+    engine.params = params
+    assert engine.active_version == engine.latest_version == 2
+    assert engine.params is params
+
+
+# ------------------------------------------------------- policy versioning
+def test_scheduler_stamps_policy_versions(setup):
+    cfg, model, params, tok, env = setup
+    engine = GenerationEngine(model, params, pad_id=tok.pad_id,
+                              stop_ids=(tok.eos_id,), max_len=512)
+    worker = RolloutWorker(engine, env, tok,
+                           RolloutConfig(max_turns=2, max_new_tokens=8,
+                                         group_size=2, n_slots=2))
+    trajs = worker.rollout(env.sample_tasks(2, seed=1), jax.random.PRNGKey(0))
+    for tr in trajs:
+        # one version per token, parallel to the logprob record
+        assert len(tr.meta["policy_versions"]) == len(tr)
+        assert len(tr.meta["policy_versions"]) == len(tr.meta["logprobs"])
+        assert tr.meta["turn_versions"]        # per-turn summary
+        # no learner published anything: every token sampled at v0
+        assert set(tr.meta["policy_versions"]) == {0}
+    assert worker.last_stats["weight_refreshes"] == 0
+    # pins released on retirement: only the active version is retained
+    assert engine.weights.n_retained == 1
+
+
+def test_reference_loop_stamps_policy_versions(setup):
+    cfg, model, params, tok, env = setup
+    engine = GenerationEngine(model, params, pad_id=tok.pad_id,
+                              stop_ids=(tok.eos_id,), max_len=512)
+    worker = RolloutWorker(engine, env, tok,
+                           RolloutConfig(max_turns=2, max_new_tokens=8,
+                                         group_size=1, mode="reference"))
+    trajs = worker.rollout_reference(env.sample_tasks(2, seed=1),
+                                     jax.random.PRNGKey(0))
+    for tr in trajs:
+        assert len(tr.meta["policy_versions"]) == len(tr)
+        assert tr.meta["turn_versions"]
+
+
+def test_supports_rounds_flag_gates_round_slicing(setup):
+    """Satellite: engines declare round support via the explicit
+    ``supports_rounds`` flag.  A double *without* the flag must be driven
+    turn-per-round (full budget every call, no step_offsets/row_budgets
+    kwargs) even if its generate() would happily accept anything — the old
+    signature probing would have mis-detected such an engine."""
+    import re as _re
+    from repro.serving.engine import DecodeSession, GenerationResult
+    cfg, model, params, tok, env = setup
+    task_re = _re.compile(r"task-(\d+)")
+
+    class NoFlagEng:
+        # NOTE: no supports_rounds attribute, but a permissive signature
+        stop_ids = ()
+        max_len = 1 << 30
+
+        def __init__(self):
+            self.task, self.turn = [], []
+            self.budgets_seen = []
+            self.kwargs_seen = set()
+
+        def start(self, contexts):
+            self.task = [int(task_re.search(tok.decode(list(c))).group(1))
+                         for c in contexts]
+            self.turn = [0] * len(contexts)
+            return DecodeSession(cache=None,
+                                 lengths=np.array([len(c) for c in contexts]),
+                                 last_logits=None,
+                                 stopped=np.zeros(len(contexts), bool))
+
+        def generate(self, session, n, key=None, **kw):
+            self.budgets_seen.append(int(n))
+            self.kwargs_seen |= set(kw)
+            toks = []
+            for i in range(session.batch):
+                toks.append([] if session.stopped[i] else
+                            tok.encode(f"<answer>t{self.task[i]}</answer>"))
+                self.turn[i] += 1
+            lps = [np.full(len(t), -1.0, np.float32) for t in toks]
+            return GenerationResult.from_lists(toks, lps, pad_id=tok.pad_id)
+
+        def extend(self, session, lists):
+            pass
+
+    eng = NoFlagEng()
+    worker = RolloutWorker(eng, env, tok,
+                           RolloutConfig(max_turns=2, max_new_tokens=64,
+                                         group_size=1))
+    assert not worker.scheduler._supports_rounds
+    tasks = [(f"task-{t}", f"t{t}") for t in range(3)]
+    trajs = worker.rollout(tasks, jax.random.PRNGKey(0))
+    assert all(b == 64 for b in eng.budgets_seen)     # full turn per round
+    assert "step_offsets" not in eng.kwargs_seen
+    assert "row_budgets" not in eng.kwargs_seen
+    for t, tr in enumerate(trajs):
+        assert tok.decode(tr.model_tokens()) == f"<answer>t{t}</answer>"
+        assert tr.finished
+
+
+# --------------------------------------------------------- sync/async parity
+@pytest.mark.slow
+def test_sync_async_parity(setup):
+    """mode="async" with refresh disabled (refresh_groups=0 => single
+    end-of-stream update) must reproduce mode="sync" exactly: same
+    trajectories, same loss, same updated params."""
+    t_sync = _trainer(setup, mode="sync")
+    t_async = _trainer(setup, mode="async", refresh_groups=0)
+    out_s = t_sync.train_iteration(jax.random.PRNGKey(7))
+    out_a = t_async.train_iteration(jax.random.PRNGKey(7))
+    assert out_s["model_tokens"] == out_a["model_tokens"]
+    assert out_s["reward_mean"] == out_a["reward_mean"]
+    np.testing.assert_array_equal(
+        np.float32(out_s["loss"]), np.float32(out_a["loss"]))
+    assert out_a["train/staleness_mean"] == 0.0      # k=0: nothing stale
+    for a, b in zip(jax.tree_util.tree_leaves(t_sync.params),
+                    jax.tree_util.tree_leaves(t_async.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert t_sync.engine.latest_version == t_async.engine.latest_version == 1
+
+
+@pytest.mark.slow
+def test_async_inflight_refresh_versions_and_staleness(setup):
+    """With refresh enabled, the learner publishes mid-rollout, the
+    scheduler swaps at round boundaries (weight_refreshes > 0), and
+    trajectories sampled across a publish enter the loss with staleness > 0."""
+    trainer = _trainer(setup, mode="async", refresh_groups=1,
+                       n_tasks=6, group_size=1, n_slots=2)
+    out = trainer.train_iteration(jax.random.PRNGKey(3))
+    assert out["train/n_updates"] == 6.0             # one per group
+    assert out["train/weight_version"] == 6.0
+    assert out["rollout/weight_refreshes"] >= 1
+    # the slot co-resident with the first retiree sampled under v0 and was
+    # updated after publishes: its tokens are stale by construction
+    assert out["train/staleness_mean"] > 0.0
+    assert out["train/staleness_max"] >= 1.0
+    assert np.isfinite(out["loss"])
+    assert np.isfinite(out["train/clip_frac_fresh"])
+    assert np.isfinite(out["train/clip_frac_stale"])
+    assert "train/staleness_p50" in out and "train/staleness_p90" in out
+    assert out["train/learner_overlap_s"] >= 0.0
+    # all pins released, store holds only the final version
+    assert trainer.engine.weights.n_retained == 1
+
+
+@pytest.mark.slow
+def test_judge_rewards_pipeline_on_second_session(setup):
+    """ModelJudgeReward is streaming-safe: scored per-retirement off the
+    trajectory stream on its own DecodeSession, so judged rewards pipeline
+    with rollout decoding (reward/pipelined_fraction > 0)."""
+    from repro.core.rewards import ModelJudgeReward
+    cfg, model, params, tok, env = setup
+    judge_engine = GenerationEngine(model, params, pad_id=tok.pad_id,
+                                    stop_ids=(tok.eos_id,), max_len=512)
+    composer = RewardComposer([(RuleReward(env), 1.0),
+                               (ModelJudgeReward(judge_engine, tok,
+                                                 max_judge_tokens=4), 0.5)])
+    assert composer.streaming_safe
+    trainer = _trainer(setup, mode="async", refresh_groups=1,
+                       composer=composer)
+    out = trainer.train_iteration(jax.random.PRNGKey(0))
+    assert out["reward/pipelined_fraction"] > 0.0
+    assert np.isfinite(out["loss"])
+
+
+# -------------------------------------------------- mixed-version loss math
+def _stale_batch(key, B=2, S=16, V=64):
+    ks = jax.random.split(key, 4)
+    logits = jax.random.normal(ks[0], (B, S, V))
+    batch = {
+        "tokens": jax.random.randint(ks[1], (B, S), 0, V),
+        "loss_mask": (jax.random.uniform(ks[2], (B, S)) > 0.4)
+        .astype(jnp.float32),
+        "advantages": jax.random.normal(ks[3], (B,)),
+        "old_logprobs": jnp.full((B, S), -3.0),
+        "ref_logprobs": jnp.zeros((B, S)),
+    }
+    return logits, batch
+
+
+def test_grpo_zero_staleness_matches_stalenessless_loss():
+    """k=0 (sync) must be bit-identical with and without the staleness key."""
+    logits, batch = _stale_batch(jax.random.PRNGKey(0))
+    l0, m0 = grpo_loss(logits, batch, GRPOConfig())
+    batch["staleness"] = jnp.zeros_like(batch["loss_mask"])
+    l1, m1 = grpo_loss(logits, batch, GRPOConfig())
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    np.testing.assert_array_equal(np.asarray(m0["pg_loss"]),
+                                  np.asarray(m1["pg_loss"]))
+    assert float(m1["staleness_mean"]) == 0.0
+    assert float(m1["staleness_frac"]) == 0.0
+    assert float(m1["clip_frac_stale"]) == 0.0
+    np.testing.assert_array_equal(np.asarray(m1["clip_frac"]),
+                                  np.asarray(m1["clip_frac_fresh"]))
+
+
+def test_grpo_mixed_version_batch_finite_and_split():
+    """old_logprobs from version v, learner at v+k: ratios/clip_frac stay
+    finite; the fresh/stale split partitions clip_frac; max_staleness masks
+    the stale rows out of the loss."""
+    logits, batch = _stale_batch(jax.random.PRNGKey(1))
+    # row 0 fresh, row 1 sampled k=3 versions behind
+    stale = jnp.stack([jnp.zeros((16,)), jnp.full((16,), 3.0)])
+    batch["staleness"] = stale
+    l, m = grpo_loss(logits, batch, GRPOConfig())
+    for k in ("loss", "pg_loss", "ratio_mean", "clip_frac",
+              "clip_frac_fresh", "clip_frac_stale", "staleness_mean",
+              "staleness_max"):
+        assert np.isfinite(float(m[k])), k
+    assert float(m["staleness_max"]) == 3.0
+    assert 0.0 < float(m["staleness_mean"]) < 3.0
+    # stale tokens masked out => identical to computing on row 0 alone
+    l_masked, mm = grpo_loss(logits, batch, GRPOConfig(max_staleness=0))
+    only_fresh = {k: (v[:1] if hasattr(v, "ndim") and v.ndim >= 1 else v)
+                  for k, v in batch.items()}
+    l_fresh, _ = grpo_loss(logits[:1], only_fresh, GRPOConfig())
+    np.testing.assert_allclose(float(l_masked), float(l_fresh),
+                               rtol=1e-5, atol=1e-6)
+    assert float(mm["staleness_frac"]) == 0.0        # stale left the mask
+
+
+def test_ppo_mixed_version_batch():
+    from repro.core.ppo import PPOConfig, ppo_loss
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 5)
+    B, S, V, D = 2, 16, 64, 8
+    logits = jax.random.normal(ks[0], (B, S, V))
+    hidden = jax.random.normal(ks[1], (B, S, D))
+    vparams = {"w": jax.random.normal(ks[2], (D, 1)) * 0.1,
+               "b": jnp.zeros((1,))}
+    batch = {
+        "tokens": jax.random.randint(ks[3], (B, S), 0, V),
+        "loss_mask": jnp.ones((B, S)),
+        "old_logprobs": jnp.full((B, S), -3.0),
+        "old_values": jnp.zeros((B, S)),
+        "rewards": jax.random.normal(ks[4], (B,)),
+    }
+    l0, m0 = ppo_loss(logits, hidden, vparams, batch, PPOConfig())
+    batch["staleness"] = jnp.zeros((B, S))
+    l1, m1 = ppo_loss(logits, hidden, vparams, batch, PPOConfig())
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    batch["staleness"] = jnp.stack([jnp.zeros((S,)), jnp.full((S,), 2.0)])
+    l2, m2 = ppo_loss(logits, hidden, vparams, batch, PPOConfig())
+    assert np.isfinite(float(l2))
+    assert float(m2["staleness_max"]) == 2.0
+    for k in ("clip_frac_fresh", "clip_frac_stale"):
+        assert np.isfinite(float(m2[k]))
+    # version mask drops the stale row from the loss denominators
+    l3, m3 = ppo_loss(logits, hidden, vparams, batch,
+                      PPOConfig(max_staleness=1))
+    assert np.isfinite(float(l3))
+    assert float(m3["staleness_mean"]) == 0.0
+
+
+# ------------------------------------------------- checkpoint + evaluate
+def test_checkpoint_persists_weight_version(tmp_path):
+    from repro.checkpoint.checkpointer import load_checkpoint, save_checkpoint
+    params = {"w": jnp.arange(4, dtype=jnp.float32)}
+    path = os.path.join(tmp_path, "v.ckpt")
+    save_checkpoint(path, params, step=3, weight_version=17)
+    p, _, step, meta = load_checkpoint(path, params)
+    assert step == 3 and meta["weight_version"] == 17
+    np.testing.assert_array_equal(np.asarray(p["w"]),
+                                  np.asarray(params["w"]))
+    # old checkpoints (no counter) keep loading; metadata just lacks the key
+    save_checkpoint(path, params, step=4)
+    _, _, _, meta = load_checkpoint(path, params)
+    assert "weight_version" not in meta
+
+
+@pytest.mark.slow
+def test_trainer_checkpoint_roundtrip_keeps_version_monotonic(setup,
+                                                              tmp_path):
+    trainer = _trainer(setup)
+    for _ in range(3):                       # version bumps per publish
+        trainer.engine.params = trainer.params
+    trainer.step = 5
+    path = trainer.save_checkpoint(os.path.join(tmp_path, "t.ckpt"))
+    resumed = _trainer(setup)
+    assert resumed.engine.latest_version == 0
+    meta = resumed.load_checkpoint(path)
+    assert meta["weight_version"] == 3
+    assert resumed.step == 5
+    assert resumed.engine.latest_version == 3      # counter re-based
+    assert resumed.engine.active_version == 3
+    for a, b in zip(jax.tree_util.tree_leaves(resumed.params),
+                    jax.tree_util.tree_leaves(trainer.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_evaluate_threads_caller_key(setup):
+    trainer = _trainer(setup)
+    seen = []
+    orig = trainer.env.sample_tasks
+
+    def spy(n, split="train", seed=0):
+        seen.append((split, seed))
+        return orig(n, split=split, seed=seed)
+
+    trainer.env.sample_tasks = spy
+    try:
+        trainer.evaluate(n_tasks=2)                        # default draw
+        trainer.evaluate(n_tasks=2, seed=99)               # explicit seed
+        trainer.evaluate(n_tasks=2, key=jax.random.PRNGKey(5))
+        trainer.evaluate(n_tasks=2, key=jax.random.PRNGKey(6))
+    finally:
+        trainer.env.sample_tasks = orig
+    assert seen[0] == ("test", 1234)         # default unchanged
+    assert seen[1] == ("test", 99)
+    assert seen[2][0] == seen[3][0] == "test"
+    assert seen[2][1] != 1234 and seen[3][1] != 1234
+    assert seen[2][1] != seen[3][1]          # different keys, different draws

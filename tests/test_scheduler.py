@@ -223,10 +223,11 @@ def test_decode_budget_adapts_while_slots_parked(setup):
     task_re = _re.compile(r"task-(\d+)")
 
     class Eng:
-        """Scripted double that *supports* round budgets (step_offsets in
-        generate's signature) and records the per-call budgets it sees."""
+        """Scripted double that *declares* round-budget support
+        (supports_rounds) and records the per-call budgets it sees."""
         stop_ids = ()
         max_len = 1 << 30
+        supports_rounds = True
 
         def __init__(self):
             self.task, self.turn, self.fresh = [], [], set()
