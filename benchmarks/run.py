@@ -9,7 +9,8 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_async_refresh, bench_async_throughput,
-                            bench_continuous_rollout, bench_decode_throughput,
+                            bench_continuous_rollout,
+                            bench_decode_roofline, bench_decode_throughput,
                             bench_kernels, bench_paged_cache,
                             bench_training_curve, roofline)
     all_rows = []
@@ -18,6 +19,7 @@ def main() -> None:
                        (bench_async_refresh, "async_refresh"),
                        (bench_decode_throughput, "decode_throughput"),
                        (bench_paged_cache, "paged_cache"),
+                       (bench_decode_roofline, "decode_roofline"),
                        (bench_kernels, "kernels"),
                        (bench_training_curve, "fig5_training_curve"),
                        (roofline, "roofline")):

@@ -55,9 +55,16 @@ occupied row, and a queued task enters only if its prompt + one turn fits
 beyond that reserve (zero-free-blocks => the task simply waits).  Tool
 observations that cannot get blocks stay pending on their parked slot until
 a retirement frees some; if the pool wedges (nothing active, nothing
-absorbable), the longest pending row is retired as ``max_len`` — the
-eviction analogue of vLLM preemption.  Mean pool utilization is reported as
-``cache_utilization``.
+absorbable), the longest pending row is **swapped out, not killed**: its
+tokens move to a host-side ``_Swapped`` record, its blocks return to the
+pool, and ``refill`` re-admits it later with a re-prefill of the full
+context — cache pressure costs latency, never data (vLLM-style
+swap-preemption).  In-flight tool futures of a swapped row stay registered
+and their results land into the record while it is out.  Only when the
+victim is the *sole* occupant — so no other row could ever free blocks for
+its return — does the scheduler fall back to the old eviction (retire as
+``max_len``).  Mean pool utilization is reported as ``cache_utilization``;
+swap traffic as ``preemptions`` / ``swap_out`` / ``swap_in``.
 
 In-flight weight refresh (``engine.publish``/``refresh_weights``): a learner
 may publish updated params at any time; the scheduler swaps them in **only
@@ -147,6 +154,25 @@ class _Slot:
     lane_clean: bool = True         # cache lane reset since the last occupant
 
 
+@dataclasses.dataclass
+class _Swapped:
+    """A preempted occupant swapped out to the host: everything needed to
+    re-admit it later and resume exactly where it left off.  ``context`` is
+    the full token stream that was in the cache lane (prompt + turns +
+    mid-turn buffer); swap-in rebuilds the lane by re-prefilling it, so a
+    swap costs one extra prefill of the context — latency, not data."""
+    job: _Job
+    key: jax.Array
+    context: List[int]
+    turn_idx: int
+    turn_toks: list
+    turn_lps: list
+    turn_vers: list
+    calls: list
+    future: object = None                # still-in-flight tool future
+    pending_obs: Optional[list] = None   # obs that landed while swapped out
+
+
 class ContinuousScheduler:
     """Drives trajectories through Generate-Parse-Invoke-Update with per-slot
     scheduling.  Requires an executor with the futures API
@@ -210,11 +236,13 @@ class ContinuousScheduler:
                  "min_round_budget": float(self.config.max_new_tokens),
                  "adaptive_rounds": 0.0, "admission_deferrals": 0.0,
                  "starved_rounds": 0.0, "evictions": 0.0,
+                 "preemptions": 0.0, "swap_out": 0.0, "swap_in": 0.0,
                  "util_sum": 0.0, "util_rounds": 0.0, "util_peak": 0.0,
                  "weight_refreshes": 0.0}
         t_start = time.monotonic()
         retired: List[Trajectory] = []
         to_refill: List[_Slot] = []
+        swapped: collections.deque = collections.deque()  # _Swapped records
 
         def retire(slot: _Slot, reason: str, finished: bool) -> None:
             tr = slot.job.traj
@@ -238,20 +266,88 @@ class ContinuousScheduler:
             session.stopped[slot.row] = True
             to_refill.append(slot)
 
+        def preempt(slot: _Slot) -> None:
+            """Swap an occupied slot out to the host instead of killing it:
+            the trajectory's tokens (and any in-flight tool future / landed
+            observation) move to a ``_Swapped`` record, the cache lane is
+            freed, and ``refill`` re-admits the record once blocks exist.
+            An outstanding future stays registered in ``by_future`` mapped
+            to the record, so its results land while the row is out."""
+            # a landed observation means slot.future is stale (already
+            # drained from the executor): carrying it into the record would
+            # park the record on a future that can never fire again
+            live_future = slot.future if slot.pending_obs is None else None
+            rec = _Swapped(
+                job=slot.job, key=slot.key,
+                context=slot.job.traj.tokens() + list(slot.turn_toks),
+                turn_idx=slot.turn_idx,
+                turn_toks=slot.turn_toks, turn_lps=slot.turn_lps,
+                turn_vers=slot.turn_vers, calls=slot.calls,
+                future=live_future, pending_obs=slot.pending_obs)
+            if rec.future is not None:
+                by_future[rec.future] = rec
+            swapped.append(rec)
+            slot.future, slot.calls = None, []
+            slot.turn_toks, slot.turn_lps, slot.turn_vers = [], [], []
+            slot.pending_obs = None
+            slot.job, slot.state = None, SlotState.FREE
+            slot.lane_clean = False
+            session.stopped[slot.row] = True
+            to_refill.append(slot)
+            stats["preemptions"] += 1
+            stats["swap_out"] += 1
+
+        def swap_in(slot: _Slot, rec: _Swapped) -> None:
+            """Re-admit a swapped-out record into a freed slot: re-prefill
+            its full context, then restore exactly the state it was
+            preempted in (mid-turn buffer, parked-on-future, or pending
+            observation)."""
+            slot.job, slot.key = rec.job, rec.key
+            slot.turn_idx = rec.turn_idx
+            slot.turn_toks, slot.turn_lps = rec.turn_toks, rec.turn_lps
+            slot.turn_vers = rec.turn_vers
+            slot.calls = rec.calls
+            slot.lane_clean = False
+            max_len = getattr(self.engine, "max_len", None)
+            if (rec.pending_obs is not None and max_len is not None
+                    and len(rec.context) + len(rec.pending_obs) > max_len):
+                # its observation landed while out and can never fit —
+                # same contract as the ``_land`` overflow path
+                retire(slot, "max_len", finished=False)
+                return
+            self._extend_rows(session, [slot.row], [rec.context])
+            stats["swap_in"] += 1
+            if rec.future is not None:
+                slot.future = rec.future
+                by_future[rec.future] = slot
+                slot.state = SlotState.PARKED
+                session.stopped[slot.row] = True
+            elif rec.pending_obs is not None:
+                slot.pending_obs = rec.pending_obs
+                slot.state = SlotState.PARKED
+                session.stopped[slot.row] = True
+            else:
+                slot.state = SlotState.ACTIVE
+
         def refill() -> int:
-            """Hand every just-freed slot the next queued task in ONE batched
-            reset + prefill (GRPO group members tend to retire together).
+            """Hand every just-freed slot the next waiting occupant —
+            swapped-out records first (they hold partial trajectories),
+            then queued tasks in ONE batched reset + prefill (GRPO group
+            members tend to retire together).
 
             Freed lanes are reset *first* — in paged mode that returns their
             blocks to the pool, and it must happen even with an empty queue
             so a dead lane can never pin blocks a live parked row is waiting
-            for.  Queued tasks are then admitted against the free-block
-            headroom minus what this very batch has already claimed (several
-            admissions must not jointly over-commit the pool); a task that
-            doesn't fit waits in the queue (zero-free-blocks backpressure).
-            If nothing is running at all, one task is force-admitted
-            regardless so an oversized prompt surfaces as an engine error
-            instead of a silent wedge."""
+            for.  Swap-ins and queued tasks are then admitted against the
+            free-block headroom minus what this very batch has already
+            claimed (several admissions must not jointly over-commit the
+            pool); whatever doesn't fit waits (zero-free-blocks
+            backpressure).  A swap-in must additionally leave room for the
+            pending observations of still-parked rows — the blocks whose
+            shortage caused the preemption — or it would re-create the very
+            wedge it resolved.  If nothing is running at all, one occupant
+            is force-admitted regardless so an oversized context surfaces
+            as an engine error instead of a silent wedge."""
             if not to_refill:
                 return 0
             dirty = [s for s in to_refill if not s.lane_clean]
@@ -259,15 +355,34 @@ class ContinuousScheduler:
                 self._reset_rows(session, [s.row for s in dirty])
                 for s in dirty:
                     s.lane_clean = True
-            if not queue:
+            if not queue and not swapped:
                 return 0
-            rows, prompts = [], []
+            admitted = 0
             claimed = 0
+            backlog = sum(self._obs_blocks(session, s) for s in slots
+                          if s.state is SlotState.PARKED
+                          and s.pending_obs is not None)
+            while to_refill and swapped:
+                need = self._admission_blocks(len(swapped[0].context))
+                admit_ok = self._can_admit(session, need + backlog, claimed)
+                if not admit_ok:
+                    if admitted or any(s.job is not None for s in slots):
+                        stats["admission_deferrals"] += 1
+                        break
+                rec = swapped.popleft()
+                slot = to_refill.pop()
+                claimed += need
+                admitted += 1
+                swap_in(slot, rec)
+                if not admit_ok:
+                    break               # force-admitted exactly one
+            rows, prompts = [], []
             while to_refill and queue:
                 need = self._admission_blocks(len(queue[0].prompt_ids))
                 admit_ok = self._can_admit(session, need, claimed)
                 if not admit_ok:
-                    if rows or any(s.job is not None for s in slots):
+                    if rows or admitted \
+                            or any(s.job is not None for s in slots):
                         stats["admission_deferrals"] += 1
                         break
                 slot, job = to_refill.pop(), queue.popleft()
@@ -282,11 +397,12 @@ class ContinuousScheduler:
             if rows:
                 self._extend_rows(session, rows, prompts)
                 stats["refills"] += len(rows)
-            return len(rows)
+            return admitted + len(rows)
 
         try:
             yield from self._schedule(session, slots, queue, by_future,
-                                      stats, retired, retire, refill)
+                                      stats, retired, retire, refill,
+                                      preempt)
         finally:
             # set stats even when the consumer abandons the stream early,
             # and release any still-parked futures from the executor
@@ -294,12 +410,17 @@ class ContinuousScheduler:
                 self.executor.forget(by_future)
             if self._versioned:
                 # abandoned mid-stream: release weight pins of occupants
-                # that never retired, so no version leaks in the store
+                # (and swapped-out records) that never retired, so no
+                # version leaks in the store
                 for slot in slots:
                     if slot.job is not None and slot.job.versions:
                         for v in slot.job.versions:
                             self.engine.unpin_version(v)
                         slot.job.versions = set()
+                for rec in swapped:
+                    for v in rec.job.versions:
+                        self.engine.unpin_version(v)
+                    rec.job.versions = set()
             wall = time.monotonic() - t_start
             self.last_stats = {
                 "wall_s": wall,
@@ -319,6 +440,9 @@ class ContinuousScheduler:
                 "admission_deferrals": stats["admission_deferrals"],
                 "starved_rounds": stats["starved_rounds"],
                 "evictions": stats["evictions"],
+                "preemptions": stats["preemptions"],
+                "swap_out": stats["swap_out"],
+                "swap_in": stats["swap_in"],
                 "weight_refreshes": stats["weight_refreshes"],
             }
             if stats["util_rounds"]:
@@ -327,7 +451,7 @@ class ContinuousScheduler:
                 self.last_stats["cache_utilization_peak"] = stats["util_peak"]
 
     def _schedule(self, session, slots, queue, by_future, stats, retired,
-                  retire, refill) -> Iterator[Trajectory]:
+                  retire, refill, preempt) -> Iterator[Trajectory]:
         """The park/retire/refill loop proper (see module docstring)."""
         turn_budget = self.config.max_new_tokens
         no_progress = 0
@@ -353,10 +477,19 @@ class ContinuousScheduler:
                         ready = self.executor.wait_ready(futures=by_future)
                         stats["tool_wait_s"] += time.monotonic() - t0
                     for fut in ready:
-                        slot = by_future.pop(fut, None)
-                        if slot is None:
+                        target = by_future.pop(fut, None)
+                        if target is None:
                             continue
-                        self._land(session, slot, fut, retire, stats)
+                        if isinstance(target, _Swapped):
+                            # row is swapped out: stage the observation on
+                            # the record; swap-in absorbs it (the max_len
+                            # check runs there, where lengths exist again)
+                            target.pending_obs = self._obs_ids(
+                                target.calls, fut, stats)
+                            target.future = None
+                            progress = True
+                            continue
+                        self._land(session, target, fut, retire, stats)
                         progress = True
                 # Absorb landed observations whose rows can get cache blocks;
                 # the rest stay pending (paged backpressure) and retry once a
@@ -395,8 +528,8 @@ class ContinuousScheduler:
                 if not active:
                     if not progress and not by_future:
                         # pool wedged: every slot is waiting for blocks that
-                        # nothing left alive can free — evict the longest
-                        self._evict(session, slots, retire, stats)
+                        # nothing left alive can free — swap out the longest
+                        self._preempt(session, slots, retire, preempt, stats)
                     continue
 
             # Round boundary: swap to the latest published weights (if a
@@ -510,13 +643,13 @@ class ContinuousScheduler:
             # Wedge breaker: rounds that move no token, land no future and
             # admit nothing — with no tool I/O left in flight — mean every
             # occupied row is starved for blocks that nothing alive can
-            # free.  Evict the longest row (vLLM-preemption analogue).
+            # free.  Swap out the longest row (vLLM-preemption analogue).
             if progress or retired or by_future:
                 no_progress = 0
             else:
                 no_progress += 1
                 if no_progress >= 2:
-                    self._evict(session, slots, retire, stats)
+                    self._preempt(session, slots, retire, preempt, stats)
                     no_progress = 0
 
     # ------------------------------------------------------------- internals
@@ -558,19 +691,23 @@ class ContinuousScheduler:
         turns = jnp.asarray([s.turn_idx for s in slots], jnp.int32)
         return _fold_rows(keys, turns)
 
-    def _land(self, session, slot: _Slot, fut, retire, stats) -> None:
-        """A parked row's tool results landed: tokenize the observation and
-        stage it on the slot (``pending_obs``) for the caller's batched,
-        block-gated prefill — or retire the slot if the context is full."""
+    def _obs_ids(self, calls, fut, stats) -> List[int]:
+        """Resolve a landed tool future into observation token ids (shared
+        by parked slots and swapped-out records)."""
         try:
             results: List[ToolResult] = fut.result()
         except Exception as e:  # executor bug — degrade to error observations
             results = [ToolResult(c.name, f"ERROR: {type(e).__name__}: {e}",
                                   ok=False, call_id=c.call_id)
-                       for c in slot.calls]
+                       for c in calls]
         stats["tool_s"] += sum(r.latency_s for r in results)
-        obs_text = self.env.manager.format_observation(results)
-        ids = self.tok.encode(obs_text)
+        return self.tok.encode(self.env.manager.format_observation(results))
+
+    def _land(self, session, slot: _Slot, fut, retire, stats) -> None:
+        """A parked row's tool results landed: tokenize the observation and
+        stage it on the slot (``pending_obs``) for the caller's batched,
+        block-gated prefill — or retire the slot if the context is full."""
+        ids = self._obs_ids(slot.calls, fut, stats)
         max_len = getattr(self.engine, "max_len", None)
         lengths = np.asarray(session.lengths)
         if max_len is not None and int(lengths[slot.row]) + len(ids) > max_len:
@@ -599,17 +736,24 @@ class ContinuousScheduler:
         free = self.engine.free_blocks(session)
         return float("inf") if free is None else free - claimed
 
-    def _evict(self, session, slots, retire, stats) -> None:
-        """Break a block-pool wedge by retiring the longest occupied row
-        (its trajectory keeps everything sampled so far, stop_reason
-        'max_len' — the cache-pressure analogue of context exhaustion)."""
+    def _preempt(self, session, slots, retire, preempt, stats) -> None:
+        """Break a block-pool wedge by swapping the longest occupied row out
+        to the host (swap-don't-kill): its blocks return to the pool and
+        ``refill`` re-admits it later via a context re-prefill, so the
+        trajectory survives intact.  Only when the victim is the *sole*
+        occupant — meaning no other row could ever free the blocks it is
+        itself waiting for — does this degrade to the old eviction: retire
+        with stop_reason 'max_len', keeping everything sampled so far."""
         lengths = np.asarray(session.lengths)
         occupied = [s for s in slots if s.job is not None]
         if not occupied:
             return
         victim = max(occupied, key=lambda s: int(lengths[s.row]))
-        stats["evictions"] += 1
-        retire(victim, "max_len", finished=False)
+        if len(occupied) == 1:
+            stats["evictions"] += 1
+            retire(victim, "max_len", finished=False)
+            return
+        preempt(victim)
 
     def _round_budget(self, n_active: int, n_parked: int) -> int:
         """Per-round decode budget: the full turn budget while nothing is

@@ -428,6 +428,7 @@ class RLTrainer:
                   "rounds", "refills", "n_slots", "cache_utilization",
                   "cache_utilization_peak", "min_round_budget",
                   "adaptive_rounds", "admission_deferrals", "evictions",
+                  "preemptions", "swap_out", "swap_in",
                   "weight_refreshes"):
             if k in sched:
                 out[f"rollout/{k}"] = float(sched[k])

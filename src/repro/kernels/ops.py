@@ -34,16 +34,21 @@ def flash_attention(q, k, v, window: int = 0, causal: bool = True,
                                interpret=_interpret())
 
 
-@jax.jit
-def paged_attention(q, k_pool, v_pool, table, q_pos):
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, table, q_pos, k_scale=None,
+                    v_scale=None, interpret=None):
     """Paged single-token decode attention over a block-table KV pool.
 
     q (B,H,D), k_pool/v_pool (N,bs,Hk,·) with trash block last, table (B,T)
     int32, q_pos (B,) int32 -> (B,H,Dv).  The block table is a scalar-prefetch
     operand, so K/V blocks stream from HBM in table order with no gather copy.
+    int8 pools pass per-slot f32 ``k_scale``/``v_scale`` (N,bs,Hk); the
+    kernel dequantizes in its inner loop.  ``interpret=None`` auto-detects
+    (interpret everywhere but TPU; REPRO_PALLAS_COMPILE=1 forces lowering).
     """
-    return paged_attention_fwd(q, k_pool, v_pool, table, q_pos,
-                               interpret=_interpret())
+    return paged_attention_fwd(
+        q, k_pool, v_pool, table, q_pos, k_scale=k_scale, v_scale=v_scale,
+        interpret=_interpret() if interpret is None else interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -17,14 +17,18 @@ paging exists to avoid.  Here the *grid itself* walks the table:
     newest token); GQA folds the G query heads of one kv head into the
     sublane dim so the (G, bs) score tile feeds the MXU;
   * online-softmax state (m, l, acc) persists across the sequentially
-    executed table_slot dimension in VMEM scratch, as in flash attention.
+    executed table_slot dimension in VMEM scratch, as in flash attention;
+  * int8 pools carry per-(block, slot, kv_head) f32 scales alongside the
+    values; the inner loop dequantizes each fetched tile, so the HBM read
+    per cached token is halved relative to bf16 and quartered vs f32.
 
 Slot ``i`` of the block at table slot ``j`` holds absolute position
 ``j*bs + i`` by construction (models/attention.py writes position p to block
 ``p // bs``, offset ``p % bs``), so masking needs only the per-row query
 position: positions <= q_pos are guaranteed to have been written by the
 current occupant, and stale slots from a previous occupant always sit at
-masked positions.
+masked positions.  Rows with ``q_pos < 0`` (dead/padded lanes) compute no
+block at all and emit exact zeros.
 
 Validated in interpret mode against kernels/ref.py::paged_attention_ref.
 """
@@ -32,6 +36,7 @@ from __future__ import annotations
 
 import functools
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -41,8 +46,23 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(table_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, block_size: int, n_table: int):
+def default_interpret() -> bool:
+    """Interpret off-TPU (CPU tests / parity oracle); compile on TPU.
+
+    ``REPRO_PALLAS_COMPILE=1`` forces Mosaic lowering on any backend.
+    """
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def _paged_kernel(table_ref, qpos_ref, q_ref, k_ref, v_ref, *rest,
+                  block_size: int, n_table: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -59,6 +79,9 @@ def _paged_kernel(table_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0, :, :].astype(jnp.float32)            # (G, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bs, Dv)
+        if quantized:
+            k = k * ks_ref[0, :, 0][:, None]                 # per-slot scale
+            v = v * vs_ref[0, :, 0][:, None]
         scale = 1.0 / math.sqrt(q.shape[-1])
         s = (q * scale) @ k.T                                # (G, bs)
         kpos = j * block_size + jax.lax.broadcasted_iota(
@@ -75,25 +98,36 @@ def _paged_kernel(table_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(j == n_table - 1)
     def _flush():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0, :, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        # rows whose every slot was masked (q_pos < 0: dead lane, all-trash
+        # table) never accumulated — emit exact zeros, not acc/eps garbage
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where((l > 0.0)[:, None], out, 0.0)
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
 
 
 def paged_attention_fwd(q, k_pool, v_pool, table, q_pos, *,
-                        interpret: bool = True):
+                        k_scale=None, v_scale=None,
+                        interpret: bool | None = None):
     """Paged single-token decode attention.
 
     q (B,H,D) — the newest token's queries; k_pool (N,bs,Hk,D),
     v_pool (N,bs,Hk,Dv) — global block pools whose last block is trash;
     table (B,T) int32 block table (-1 = unallocated); q_pos (B,) int32 —
     each row's query position (the row's cache holds positions
-    ``0..q_pos`` inclusive).  Returns (B,H,Dv).
+    ``0..q_pos`` inclusive; ``q_pos < 0`` => dead row, output is exact
+    zeros).  int8 pools pass ``k_scale``/``v_scale`` (N,bs,Hk) f32
+    per-slot dequant scales.  ``interpret=None`` auto-detects the backend
+    (interpret everywhere but TPU).  Returns (B,H,Dv) in q's dtype.
     """
+    if interpret is None:
+        interpret = default_interpret()
     B, H, D = q.shape
     N, bs, Hk, _ = k_pool.shape
     Dv = v_pool.shape[-1]
     T = table.shape[1]
     G = H // Hk
+    quantized = k_scale is not None
     qh = q.reshape(B, Hk, G, D)
     table = table.astype(jnp.int32).reshape(-1)          # (B*T,) for prefetch
 
@@ -101,14 +135,26 @@ def paged_attention_fwd(q, k_pool, v_pool, table, q_pos, *,
         blk = table_ref[b * T + j]
         return (jnp.where(blk < 0, N - 1, blk), 0, hk, 0)
 
+    def scale_map(b, hk, j, table_ref, qpos_ref):
+        blk = table_ref[b * T + j]
+        return (jnp.where(blk < 0, N - 1, blk), 0, hk)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), lambda b, hk, j, *_: (b, hk, 0, 0)),
+        pl.BlockSpec((1, bs, 1, D), kv_map),
+        pl.BlockSpec((1, bs, 1, Dv), kv_map),
+    ]
+    operands = [qh, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bs, 1), scale_map),
+                     pl.BlockSpec((1, bs, 1), scale_map)]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hk, T),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, hk, j, *_: (b, hk, 0, 0)),
-            pl.BlockSpec((1, bs, 1, D), kv_map),
-            pl.BlockSpec((1, bs, 1, Dv), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, Dv),
                                lambda b, hk, j, *_: (b, hk, 0, 0)),
         scratch_shapes=[
@@ -117,11 +163,12 @@ def paged_attention_fwd(q, k_pool, v_pool, table, q_pos, *,
             pltpu.VMEM((G, Dv), jnp.float32),
         ],
     )
-    kernel = functools.partial(_paged_kernel, block_size=bs, n_table=T)
+    kernel = functools.partial(_paged_kernel, block_size=bs, n_table=T,
+                               quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hk, G, Dv), q.dtype),
         interpret=interpret,
-    )(table, q_pos.astype(jnp.int32), qh, k_pool, v_pool)
+    )(table, q_pos.astype(jnp.int32), *operands)
     return out.reshape(B, H, Dv)

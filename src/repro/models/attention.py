@@ -126,27 +126,51 @@ def kv_cache_specs(cfg, batch: int, max_len: int, window: int = 0) -> dict:
 
 
 def init_paged_kv_cache(cfg, num_blocks: int, block_size: int, batch: int,
-                        max_blocks_per_row: int) -> dict:
+                        max_blocks_per_row: int,
+                        kv_dtype: str = "fp") -> dict:
     """Paged cache for one attention layer: ``num_blocks`` allocatable pool
     blocks + 1 trash block, and a (batch, max_blocks_per_row) block table
-    initialized to -1 (unallocated)."""
+    initialized to -1 (unallocated).
+
+    ``kv_dtype="int8"`` stores pool values as int8 with per-(block, slot
+    [, kv_head]) f32 absmax scales in ``<leaf>_scale`` companions — half
+    the bytes per cached token vs bf16 (quarter vs f32), so the same HBM
+    holds twice the blocks.  Values are quantized on cache write and
+    dequantized on read (kernel inner loop / gather); fp stays the default
+    and the accuracy oracle.
+    """
     n = num_blocks + 1                       # last block = trash
     dt = cfg.activation_dtype
+    quant = kv_dtype == "int8"
+    if kv_dtype not in ("fp", "int8"):
+        raise ValueError(f"kv_dtype must be 'fp' or 'int8', got {kv_dtype!r}")
     pos = jnp.full((n, block_size), -1, jnp.int32)
     table = jnp.full((batch, max_blocks_per_row), -1, jnp.int32)
     if cfg.uses_mla:
-        return {
+        cache = {
             "ckv": jnp.zeros((n, block_size, cfg.kv_lora_rank), dt),
             "krope": jnp.zeros((n, block_size, cfg.qk_rope_head_dim), dt),
             "pos": pos,
             "table": table,
         }
-    return {
+        if quant:
+            for name in ("ckv", "krope"):
+                cache[name] = cache[name].astype(jnp.int8)
+                cache[name + "_scale"] = jnp.zeros((n, block_size),
+                                                   jnp.float32)
+        return cache
+    cache = {
         "k": jnp.zeros((n, block_size, cfg.n_kv_heads, cfg.head_dim), dt),
         "v": jnp.zeros((n, block_size, cfg.n_kv_heads, cfg.v_dim), dt),
         "pos": pos,
         "table": table,
     }
+    if quant:
+        for name in ("k", "v"):
+            cache[name] = cache[name].astype(jnp.int8)
+            cache[name + "_scale"] = jnp.zeros(
+                (n, block_size, cfg.n_kv_heads), jnp.float32)
+    return cache
 
 
 def _scatter_cache(buf: jax.Array, new: jax.Array, slots: jax.Array) -> jax.Array:
@@ -155,31 +179,32 @@ def _scatter_cache(buf: jax.Array, new: jax.Array, slots: jax.Array) -> jax.Arra
     return buf.at[b_idx, slots].set(new.astype(buf.dtype))
 
 
-def _paged_update(cache: dict, kv_leaves: dict, positions: jax.Array,
-                  kv_valid) -> tuple:
-    """Scatter new tokens through the block table and gather per-row K/V.
+INT8_QMAX = 127.0
 
-    ``kv_leaves`` maps leaf name -> (B,Q,...) new values.  Returns
-    ``(new_cache, gathered, k_pos)`` where ``gathered[name]`` is the row-major
-    (B, T*bs, ...) view of the pool through the table and ``k_pos`` is the
-    matching (B, T*bs) absolute-position array (-1 = empty/never attend).
 
-    Writes for invalid entries (``kv_valid`` False or an unallocated table
-    slot) go to the trash block — the last pool block, which no table ever
-    references with a valid id — so a pad can never touch a live block.
+def _quantize_int8(new: jax.Array) -> tuple:
+    """(B,Q,...,F) f values -> (int8 values, f32 scales (B,Q,...)).
 
-    The gather materializes each row's K/V contiguously (B, T*bs, ...) per
-    call — XLA-friendly and exact, but per-step HBM traffic still scales
-    with table width.  On real TPUs the decode hot path should instead use
-    kernels/paged_attention.py (ops.paged_attention), which streams pool
-    blocks via a scalar-prefetched table with no gather copy — see ROADMAP
-    open item (d); on this CPU container the interpret-mode kernel inside
-    the scanned decode loop would be far slower than the compiled gather.
+    Symmetric per-token absmax over the feature dim: scale = max|x|/127,
+    so dequant error per element is bounded by scale/2."""
+    amax = jnp.max(jnp.abs(new.astype(jnp.float32)), axis=-1)
+    scale = amax / INT8_QMAX
+    q = jnp.round(new.astype(jnp.float32) / jnp.maximum(scale, 1e-12)[..., None])
+    return q.astype(jnp.int8), scale
+
+
+def _paged_scatter(cache: dict, kv_leaves: dict, positions: jax.Array,
+                   kv_valid) -> dict:
+    """Scatter new tokens through the block table into the pool.
+
+    ``kv_leaves`` maps leaf name -> (B,Q,...) new values.  Writes for
+    invalid entries (``kv_valid`` False or an unallocated table slot) go to
+    the trash block — the last pool block, which no table ever references
+    with a valid id — so a pad can never touch a live block.  int8 pools
+    (marked by a ``<leaf>_scale`` companion) quantize on write.
     """
-    any_leaf = next(iter(kv_leaves.values()))
-    B = any_leaf.shape[0]
-    pool_blocks, bs = cache["pos"].shape
-    trash = pool_blocks - 1
+    bs = cache["pos"].shape[1]
+    trash = cache["pos"].shape[0] - 1
     table = cache["table"]                                   # (B, T)
 
     blk = jnp.clip(positions, 0, table.shape[1] * bs - 1) // bs
@@ -192,16 +217,56 @@ def _paged_update(cache: dict, kv_leaves: dict, positions: jax.Array,
 
     new_cache = dict(cache)
     for name, new in kv_leaves.items():
-        new_cache[name] = cache[name].at[ids_w, off].set(
-            new.astype(cache[name].dtype))
+        if name + "_scale" in cache:
+            qv, sc = _quantize_int8(new)
+            new_cache[name] = cache[name].at[ids_w, off].set(qv)
+            new_cache[name + "_scale"] = cache[name + "_scale"].at[
+                ids_w, off].set(sc)
+        else:
+            new_cache[name] = cache[name].at[ids_w, off].set(
+                new.astype(cache[name].dtype))
     new_cache["pos"] = cache["pos"].at[ids_w, off].set(store_pos)
+    return new_cache
 
+
+def _paged_gather(cache: dict, names, out_dtype) -> tuple:
+    """Gather per-row K/V views through the block table.
+
+    Returns ``(gathered, k_pos)`` where ``gathered[name]`` is the row-major
+    (B, T*bs, ...) view of the pool through the table and ``k_pos`` is the
+    matching (B, T*bs) absolute-position array (-1 = empty/never attend).
+    int8 leaves dequantize through their ``<leaf>_scale`` companion.
+
+    The gather materializes each row's K/V contiguously per call —
+    XLA-friendly and exact, but per-step HBM traffic still scales with
+    table width.  On real TPUs the decode hot path uses
+    kernels/paged_attention.py (ops.paged_attention) instead, which streams
+    pool blocks via a scalar-prefetched table with no gather copy; this
+    gather remains the interpret/CPU fallback and the parity oracle.
+    """
+    table = cache["table"]
+    B = table.shape[0]
+    trash = cache["pos"].shape[0] - 1
     gather_ids = jnp.where(table < 0, trash, table)          # (B, T)
     gathered = {}
-    for name in kv_leaves:
-        g = new_cache[name][gather_ids]                      # (B, T, bs, ...)
-        gathered[name] = g.reshape((B, -1) + g.shape[3:])
-    k_pos = new_cache["pos"][gather_ids].reshape(B, -1)      # (B, T*bs)
+    for name in names:
+        g = cache[name][gather_ids]                          # (B, T, bs, ...)
+        if name + "_scale" in cache:
+            sc = cache[name + "_scale"][gather_ids]          # (B, T, bs, ...)
+            g = g.astype(jnp.float32) * sc[..., None]
+        gathered[name] = g.reshape((B, -1) + g.shape[3:]).astype(out_dtype)
+    k_pos = cache["pos"][gather_ids].reshape(B, -1)          # (B, T*bs)
+    return gathered, k_pos
+
+
+def _paged_update(cache: dict, kv_leaves: dict, positions: jax.Array,
+                  kv_valid) -> tuple:
+    """Scatter new tokens, then gather per-row K/V: the pure-JAX paged
+    decode path.  Returns ``(new_cache, gathered, k_pos)``."""
+    any_leaf = next(iter(kv_leaves.values()))
+    new_cache = _paged_scatter(cache, kv_leaves, positions, kv_valid)
+    gathered, k_pos = _paged_gather(new_cache, list(kv_leaves),
+                                    any_leaf.dtype)
     return new_cache, gathered, k_pos
 
 
@@ -316,11 +381,17 @@ def _causal_mask(q_pos, k_pos, window: int):
 
 # ---------------------------------------------------------------- GQA apply
 def gqa_apply(params, cfg, x, positions, cache=None, window: int = 0,
-              causal: bool = True, use_flash: bool = False, kv_valid=None):
+              causal: bool = True, use_flash: bool = False, kv_valid=None,
+              paged_kernel: bool = False, paged_interpret=None):
     """x (B,Q,d), positions (B,Q).  Returns (out, new_cache).
 
     ``kv_valid`` (B,Q) bool marks right-pad positions in ragged rollout
     batches: invalid positions are stored with pos=-1 (never attended).
+
+    ``paged_kernel`` routes single-token paged decode (Q==1, "table" cache)
+    through the Pallas block-table kernel (kernels/paged_attention.py)
+    instead of the dense pool gather; ``paged_interpret`` overrides the
+    kernel's backend auto-detect (None = interpret everywhere but TPU).
     """
     B, Q, _ = x.shape
     H, Hk, hd, vd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_dim
@@ -345,8 +416,24 @@ def gqa_apply(params, cfg, x, positions, cache=None, window: int = 0,
 
     new_cache = None
     if cache is not None and "table" in cache:
-        new_cache, gathered, k_pos = _paged_update(
-            cache, {"k": k, "v": v}, positions, kv_valid)
+        new_cache = _paged_scatter(cache, {"k": k, "v": v}, positions,
+                                   kv_valid)
+        if paged_kernel and causal and Q == 1:
+            # decode hot path: stream pool blocks through the Pallas
+            # block-table kernel — no dense gather copy.  Dead rows
+            # (kv_valid False) pass q_pos=-1 and emit exact zeros.
+            from repro.kernels.ops import paged_attention
+            q_pos = positions[:, 0]
+            if kv_valid is not None:
+                q_pos = jnp.where(kv_valid[:, 0], q_pos, -1)
+            outv = paged_attention(
+                q[:, 0], new_cache["k"], new_cache["v"], new_cache["table"],
+                q_pos, k_scale=new_cache.get("k_scale"),
+                v_scale=new_cache.get("v_scale"), interpret=paged_interpret)
+            out = outv[:, None].astype(dt)                   # (B,1,H,vd)
+            out = jnp.einsum("bqhe,hed->bqd", out, params["o"].astype(dt))
+            return shard_hint(out, ("batch", "seq", "embed")), new_cache
+        gathered, k_pos = _paged_gather(new_cache, ("k", "v"), dt)
         k_all, v_all = gathered["k"], gathered["v"]
     elif cache is not None:
         M = cache["k"].shape[1]
@@ -529,9 +616,14 @@ def encode_cross_kv(params, cfg, enc_out):
 
 
 def attention_apply(params, cfg, x, positions, cache=None, window: int = 0,
-                    causal: bool = True, use_flash: bool = False, kv_valid=None):
+                    causal: bool = True, use_flash: bool = False, kv_valid=None,
+                    paged_kernel: bool = False, paged_interpret=None):
     if cfg.uses_mla:
+        # MLA decodes absorbed (scores in latent space over ckv/krope) — the
+        # two-pool kernel variant is future work, so paged MLA keeps the
+        # dense gather (int8 pools still dequant through _paged_gather)
         return mla_apply(params, cfg, x, positions, cache=cache, window=window,
                          kv_valid=kv_valid)
     return gqa_apply(params, cfg, x, positions, cache=cache, window=window,
-                     causal=causal, use_flash=use_flash, kv_valid=kv_valid)
+                     causal=causal, use_flash=use_flash, kv_valid=kv_valid,
+                     paged_kernel=paged_kernel, paged_interpret=paged_interpret)

@@ -124,12 +124,34 @@ class PagedCache(CachePolicy):
     occupant's stale K/V) and the rows' table entries to -1.  SSM /
     hybrid-mamba state keeps the per-row contiguous layout and per-row reset.
     Requires window=0 — sliding-window ring buffers stay contiguous.
+
+    Decode hot-path knobs:
+
+    * ``kv_dtype`` — "fp" (default; training-parity oracle) or "int8"
+      (quantize-on-write block pools with per-slot scales: half the bytes
+      per cached token vs bf16, so the same HBM holds 2x the blocks);
+    * ``use_kernel`` — route GQA decode through the Pallas block-table
+      kernel (kernels/paged_attention.py).  None = auto: kernel on TPU,
+      JAX gather fallback elsewhere (the gather stays the parity oracle);
+    * ``interpret`` — override the kernel's interpret/compile auto-detect
+      (forwarded to pallas_call; None = interpret everywhere but TPU).
     """
     block_size: int
     num_blocks: int
+    kv_dtype: str = "fp"
+    use_kernel: Optional[bool] = None
+    interpret: Optional[bool] = None
 
     def max_blocks_per_row(self, max_len: int) -> int:
         return max(1, math.ceil(max_len / self.block_size))
+
+    def kernel_enabled(self) -> bool:
+        """Resolve ``use_kernel``: explicit setting, else kernel iff the
+        backend would compile it (TPU / REPRO_PALLAS_COMPILE=1)."""
+        if self.use_kernel is not None:
+            return bool(self.use_kernel)
+        from repro.kernels.paged_attention import default_interpret
+        return not default_interpret()
 
     def init_cache(self, model, batch, max_len, window=0):
         c = model.cfg
@@ -142,7 +164,8 @@ class PagedCache(CachePolicy):
 
         def paged_single():
             return ATT.init_paged_kv_cache(c, self.num_blocks,
-                                           self.block_size, batch, T_blk)
+                                           self.block_size, batch, T_blk,
+                                           kv_dtype=self.kv_dtype)
 
         if c.family in ("dense", "moe", "vlm", "encdec"):
             n_stack = (c.n_layers - c.first_k_dense
@@ -262,7 +285,8 @@ class Model:
     def apply(self, params, batch: dict, caches=None, positions=None,
               window: int = 0, use_flash: bool = False, use_kernel: bool = False,
               moe_dense_ref: bool = False, kv_valid=None,
-              last_token_only=False):
+              last_token_only=False, paged_kernel: bool = False,
+              paged_interpret=None):
         """Full-sequence forward (train / prefill).
 
         Returns (logits, aux_loss, new_caches).  ``batch`` carries "tokens"
@@ -274,7 +298,9 @@ class Model:
                               prefix_embeds=batch.get("prefix_embeds"),
                               caches=caches, window=window, use_flash=use_flash,
                               moe_dense_ref=moe_dense_ref, kv_valid=kv_valid,
-                              last_token_only=last_token_only)
+                              last_token_only=last_token_only,
+                              paged_kernel=paged_kernel,
+                              paged_interpret=paged_interpret)
         if c.family == "ssm":
             return T.mamba_lm_apply(params, c, batch["tokens"],
                                     caches=caches, use_kernel=use_kernel,
@@ -285,18 +311,23 @@ class Model:
                                  caches=caches, window=window,
                                  use_flash=use_flash, use_kernel=use_kernel,
                                  kv_valid=kv_valid,
-                                 last_token_only=last_token_only)
+                                 last_token_only=last_token_only,
+                                 paged_kernel=paged_kernel,
+                                 paged_interpret=paged_interpret)
         if c.family == "encdec":
             return T.encdec_apply(params, c, batch["tokens"],
                                   prefix_embeds=batch["prefix_embeds"],
                                   positions=positions, caches=caches,
                                   window=window, use_flash=use_flash,
                                   kv_valid=kv_valid,
-                                  last_token_only=last_token_only)
+                                  last_token_only=last_token_only,
+                                  paged_kernel=paged_kernel,
+                                  paged_interpret=paged_interpret)
         raise ValueError(c.family)
 
     def decode_step(self, params, tokens, positions, caches, window: int = 0,
-                    cross_kv=None, kv_valid=None):
+                    cross_kv=None, kv_valid=None, paged_kernel: bool = False,
+                    paged_interpret=None):
         """tokens (B,Q small), positions (B,Q) -> (logits, new_caches).
 
         Contract (the serving engine traces this inside a jitted
@@ -305,16 +336,22 @@ class Model:
         structure/shapes/dtypes as ``caches`` so it can be loop-carried.
         Rows with ``kv_valid=False`` must leave the sequence state untouched
         (attention stores pos=-1; SSM freezes the recurrent state via dt=0).
+
+        ``paged_kernel``/``paged_interpret`` (from ``PagedCache``) route
+        single-token GQA decode through the Pallas block-table kernel.
         """
         c = self.cfg
         if c.family == "encdec":
             logits, _, nc = T.encdec_decode_stack(
                 params, c, tokens, cross_kv, positions=positions,
-                caches=caches, window=window, kv_valid=kv_valid)
+                caches=caches, window=window, kv_valid=kv_valid,
+                paged_kernel=paged_kernel, paged_interpret=paged_interpret)
             return logits, nc
         logits, _, nc = self.apply(params, {"tokens": tokens}, caches=caches,
                                    positions=positions, window=window,
-                                   kv_valid=kv_valid)
+                                   kv_valid=kv_valid,
+                                   paged_kernel=paged_kernel,
+                                   paged_interpret=paged_interpret)
         return logits, nc
 
     # ---------------------------------------------------------- caches

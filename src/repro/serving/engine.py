@@ -306,11 +306,26 @@ class GenerationEngine:
     def __init__(self, model: Model, params, pad_id: int, stop_ids: Sequence[int],
                  max_len: int = 1024, temperature: float = 1.0,
                  window: int = 0, cache_mode: str = "contiguous",
-                 page_size: int = 16, num_blocks: int = 0):
+                 page_size: int = 16, num_blocks: int = 0,
+                 kv_cache_dtype: str = "fp",
+                 paged_kernel: Optional[bool] = None,
+                 paged_interpret: Optional[bool] = None,
+                 prefill_chunk: int = 0):
         """``cache_mode="paged"`` allocates KV memory as ``num_blocks`` blocks
         of ``page_size`` tokens shared by the whole batch (0 = one full
         ``max_len`` worth per row, i.e. the contiguous footprint — pass less
-        to actually oversubscribe).  Requires window=0."""
+        to actually oversubscribe).  Requires window=0.
+
+        Paged decode hot-path knobs (forwarded to :class:`PagedCache`):
+        ``kv_cache_dtype`` "fp" (default, training-parity oracle) or "int8"
+        (quantized block pools, 2x effective pool capacity);
+        ``paged_kernel`` None = auto (Pallas block-table kernel on TPU, JAX
+        gather fallback elsewhere), True/False forces; ``paged_interpret``
+        overrides the kernel's interpret auto-detect.  ``prefill_chunk``
+        (0 = off; rounded up to the bucket size) streams long prompts
+        through fixed-width compute chunks that write the paged pool
+        incrementally, bounding prefill compile shapes at the chunk width.
+        """
         self.model = model
         self.weights = WeightStore(params)
         self.pad_id = pad_id
@@ -322,9 +337,23 @@ class GenerationEngine:
             raise ValueError(f"unknown cache_mode {cache_mode!r}")
         if cache_mode == "paged" and window:
             raise ValueError("cache_mode='paged' requires window=0")
+        if kv_cache_dtype != "fp" and cache_mode != "paged":
+            raise ValueError("kv_cache_dtype requires cache_mode='paged' "
+                             "(the contiguous cache is the fp oracle)")
         self.cache_mode = cache_mode
         self.page_size = page_size
         self.num_blocks = num_blocks
+        self.kv_cache_dtype = kv_cache_dtype
+        self.paged_interpret = paged_interpret
+        self.prefill_chunk = _bucket(prefill_chunk) if prefill_chunk else 0
+        self._policy_knobs = dict(kv_dtype=kv_cache_dtype,
+                                  use_kernel=paged_kernel,
+                                  interpret=paged_interpret)
+        # resolved once per engine: the jitted impls read it at trace time
+        self._use_paged_kernel = (
+            cache_mode == "paged"
+            and PagedCache(block_size=page_size, num_blocks=0,
+                           **self._policy_knobs).kernel_enabled())
         self._prefill_jit = jax.jit(self._prefill_impl)
         self._decode_jit = jax.jit(self._decode_impl)
         self._loop_jit = jax.jit(self._decode_loop_impl,
@@ -443,7 +472,8 @@ class GenerationEngine:
         kw = {"cross_kv": cross_kv} if self.model.cfg.family == "encdec" else {}
         logits, new_cache = self.model.decode_step(
             params, tokens, positions, cache, window=self.window,
-            kv_valid=valid, **kw)
+            kv_valid=valid, paged_kernel=self._use_paged_kernel,
+            paged_interpret=self.paged_interpret, **kw)
         return logits, new_cache
 
     def _decode_impl(self, params, cache, tokens, positions, valid, cross_kv):
@@ -451,7 +481,8 @@ class GenerationEngine:
         kw = {"cross_kv": cross_kv} if self.model.cfg.family == "encdec" else {}
         logits, new_cache = self.model.decode_step(
             params, tokens, positions, cache, window=self.window,
-            kv_valid=valid[:, None], **kw)
+            kv_valid=valid[:, None], paged_kernel=self._use_paged_kernel,
+            paged_interpret=self.paged_interpret, **kw)
         return logits[:, 0, :], new_cache
 
     def _decode_loop_impl(self, params, cache, last_logits, lengths, stopped,
@@ -500,7 +531,9 @@ class GenerationEngine:
             pos = lengths[:, None]
             logits, cache = self.model.decode_step(
                 params, feed, pos, cache, window=self.window,
-                kv_valid=accept[:, None], **kw)
+                kv_valid=accept[:, None],
+                paged_kernel=self._use_paged_kernel,
+                paged_interpret=self.paged_interpret, **kw)
             last_logits = jnp.where(accept[:, None], logits[:, 0, :],
                                     last_logits)
             lengths = lengths + accept.astype(lengths.dtype)
@@ -533,7 +566,7 @@ class GenerationEngine:
             per_row = max(1, math.ceil(self.max_len / self.page_size))
             n_blocks = self.num_blocks or B * per_row
             policy = PagedCache(block_size=self.page_size,
-                                num_blocks=n_blocks)
+                                num_blocks=n_blocks, **self._policy_knobs)
             allocator = BlockAllocator(n_blocks, self.page_size, B, per_row)
             cache = self.model.init_cache(B, self.max_len, self.window,
                                           policy=policy)
@@ -552,8 +585,15 @@ class GenerationEngine:
         return session
 
     def extend(self, session: DecodeSession, new_tokens: List[List[int]]) -> None:
-        """Prefill ragged per-row token lists into the session cache."""
-        B = session.batch
+        """Prefill ragged per-row token lists into the session cache.
+
+        With ``prefill_chunk`` set, prompts longer than one chunk stream
+        through fixed-width compute chunks: each chunk maps only the pool
+        blocks it needs, prefills at a bounded (bucketed) width, and updates
+        ``last_logits`` for rows whose final new token lands in it — so a
+        32k prompt costs many ``prefill_chunk``-wide compiles instead of one
+        32k-wide one, and the paged pool fills incrementally.
+        """
         lens = np.array([len(t) for t in new_tokens], np.int64)
         if lens.max(initial=0) == 0:
             return
@@ -562,6 +602,21 @@ class GenerationEngine:
                 f"context overflow: extend to {(session.lengths + lens).max()} "
                 f"tokens > engine max_len={self.max_len}; raise max_len or "
                 f"shorten prompts")
+        C = self.prefill_chunk
+        if C and int(lens.max()) > C:
+            for c0 in range(0, int(lens.max()), C):
+                self._extend_once(session,
+                                  [list(t[c0:c0 + C]) for t in new_tokens])
+        else:
+            self._extend_once(session, new_tokens)
+
+    def _extend_once(self, session: DecodeSession,
+                     new_tokens: List[List[int]]) -> None:
+        """One bucketed prefill call (a whole extend, or one chunk of it)."""
+        B = session.batch
+        lens = np.array([len(t) for t in new_tokens], np.int64)
+        if lens.max(initial=0) == 0:
+            return
         if session.allocator is not None:
             # prefill needs full coverage: map blocks for every new token
             # before any position is written (no partial prefills)
