@@ -1,32 +1,67 @@
 """Benchmark harness — one entry per paper table/figure plus the roofline
 table.  Prints ``name,us_per_call,derived`` CSV lines (and richer per-bench
-output above them)."""
+output above them).
+
+``--list`` imports and prints every registered bench without running any —
+the quick-tier smoke that the registry resolves (scripts/check.sh).
+``--only LABEL`` runs a single bench by its registry label.
+"""
 from __future__ import annotations
 
+import argparse
+import importlib
 import sys
 import time
 
+# label -> module under benchmarks/ (declaration order is run order)
+REGISTRY = (
+    ("table1_async_throughput", "bench_async_throughput"),
+    ("continuous_rollout", "bench_continuous_rollout"),
+    ("async_refresh", "bench_async_refresh"),
+    ("decode_throughput", "bench_decode_throughput"),
+    ("paged_cache", "bench_paged_cache"),
+    ("prefix_sharing", "bench_prefix_sharing"),
+    ("decode_roofline", "bench_decode_roofline"),
+    ("kernels", "bench_kernels"),
+    ("fig5_training_curve", "bench_training_curve"),
+    ("roofline", "roofline"),
+)
 
-def main() -> None:
-    from benchmarks import (bench_async_refresh, bench_async_throughput,
-                            bench_continuous_rollout,
-                            bench_decode_roofline, bench_decode_throughput,
-                            bench_kernels, bench_paged_cache,
-                            bench_training_curve, roofline)
+
+def _resolve(modname: str):
+    return importlib.import_module(f"benchmarks.{modname}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--list", action="store_true",
+                    help="import + list every registered bench, run none")
+    ap.add_argument("--only", metavar="LABEL",
+                    help="run a single bench by registry label")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for label, modname in REGISTRY:
+            mod = _resolve(modname)       # import failure = broken registry
+            assert callable(getattr(mod, "main", None)), modname
+            print(f"{label:28s} benchmarks/{modname}.py")
+        return 0
+
+    selected = REGISTRY
+    if args.only:
+        selected = [e for e in REGISTRY if e[0] == args.only]
+        if not selected:
+            known = ", ".join(label for label, _ in REGISTRY)
+            print(f"unknown bench {args.only!r}; known: {known}",
+                  file=sys.stderr)
+            return 2
+
     all_rows = []
-    for mod, label in ((bench_async_throughput, "table1_async_throughput"),
-                       (bench_continuous_rollout, "continuous_rollout"),
-                       (bench_async_refresh, "async_refresh"),
-                       (bench_decode_throughput, "decode_throughput"),
-                       (bench_paged_cache, "paged_cache"),
-                       (bench_decode_roofline, "decode_roofline"),
-                       (bench_kernels, "kernels"),
-                       (bench_training_curve, "fig5_training_curve"),
-                       (roofline, "roofline")):
+    for label, modname in selected:
         print(f"===== {label} =====", flush=True)
         t0 = time.monotonic()
         try:
-            rows = mod.main() or []
+            rows = _resolve(modname).main() or []
         except Exception as e:  # a missing artifact must not kill the harness
             print(f"{label},ERROR,{type(e).__name__}: {e}")
             rows = []
@@ -36,7 +71,8 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

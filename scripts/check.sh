@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Pre-push gate: quick test tier + benchmark-registry smoke.
+#
+#   scripts/check.sh            # from anywhere inside the repo
+#
+# Runs the non-slow pytest tier (the ROADMAP tier-1 set minus the long
+# integration runs) and then imports every registered benchmark via
+# `benchmarks/run.py --list` so a broken registry entry fails fast without
+# paying for an actual benchmark run.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src python -m pytest -m "not slow" -q
+PYTHONPATH=src:. python benchmarks/run.py --list
+echo "check.sh: all green"

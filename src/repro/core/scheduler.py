@@ -66,6 +66,19 @@ its return — does the scheduler fall back to the old eviction (retire as
 ``max_len``).  Mean pool utilization is reported as ``cache_utilization``;
 swap traffic as ``preemptions`` / ``swap_out`` / ``swap_in``.
 
+Prefix sharing (``engine.prefix_sharing``): admission is *group-aware* — a
+G-way GRPO group refilled in one batch charges its shared full prompt
+blocks once (the engine prefills the leader and remaps followers in the
+same batched prefill), and a prompt whose prefix is already live in the
+engine's radix index is charged only its unshared suffix
+(``engine.live_shared_blocks``).  Swap-in re-prefills start from length 0,
+so a re-admitted record's full prompt blocks resolve through the radix and
+its shared mappings are restored without recompute.  Sharing traffic is
+reported as ``prefix_hit_rate`` (prompt tokens served from shared blocks),
+``shared_blocks`` (peak blocks mapped by >1 row), ``cow_count`` and
+``prefix_evictions``; the allocator's invariant self-check runs at the end
+of every stream.
+
 In-flight weight refresh (``engine.publish``/``refresh_weights``): a learner
 may publish updated params at any time; the scheduler swaps them in **only
 at a round boundary** (top of the decode loop), so a version change can
@@ -359,11 +372,12 @@ class ContinuousScheduler:
                 return 0
             admitted = 0
             claimed = 0
+            seen: set = set()       # prompts admitted in THIS batched refill
             backlog = sum(self._obs_blocks(session, s) for s in slots
                           if s.state is SlotState.PARKED
                           and s.pending_obs is not None)
             while to_refill and swapped:
-                need = self._admission_blocks(len(swapped[0].context))
+                need = self._admission_blocks(session, swapped[0].context)
                 admit_ok = self._can_admit(session, need + backlog, claimed)
                 if not admit_ok:
                     if admitted or any(s.job is not None for s in slots):
@@ -378,7 +392,12 @@ class ContinuousScheduler:
                     break               # force-admitted exactly one
             rows, prompts = [], []
             while to_refill and queue:
-                need = self._admission_blocks(len(queue[0].prompt_ids))
+                # group-aware: a G-way group refilled together is charged
+                # its shared prompt blocks once (the engine's prefix
+                # sharing maps followers onto the leader's blocks in the
+                # same batched prefill below)
+                need = self._admission_blocks(session, queue[0].prompt_ids,
+                                              seen)
                 admit_ok = self._can_admit(session, need, claimed)
                 if not admit_ok:
                     if rows or admitted \
@@ -390,6 +409,7 @@ class ContinuousScheduler:
                 slot.turn_idx = 0
                 slot.lane_clean = False
                 claimed += need
+                seen.add(tuple(job.prompt_ids))
                 rows.append(slot.row)
                 prompts.append(job.prompt_ids)
                 if not admit_ok:
@@ -449,6 +469,22 @@ class ContinuousScheduler:
                 self.last_stats["cache_utilization"] = (
                     stats["util_sum"] / stats["util_rounds"])
                 self.last_stats["cache_utilization_peak"] = stats["util_peak"]
+            if hasattr(self.engine, "prefix_stats"):
+                ps = self.engine.prefix_stats(session)
+                if ps is not None:
+                    self.last_stats["prefix_hit_rate"] = ps["prefix_hit_rate"]
+                    self.last_stats["shared_blocks"] = float(
+                        ps["shared_blocks_peak"])
+                    self.last_stats["cow_count"] = float(ps["cow_count"])
+                    self.last_stats["prefix_evictions"] = float(
+                        ps["prefix_evictions"])
+            # Allocator invariant self-check after the churn of a whole
+            # stream (retire/refill/swap/preempt): shared blocks must be
+            # neither leaked nor double-freed.  Runs on every scheduler
+            # test by construction.
+            alloc = getattr(session, "allocator", None)
+            if alloc is not None and hasattr(alloc, "check"):
+                alloc.check()
 
     def _schedule(self, session, slots, queue, by_future, stats, retired,
                   retire, refill, preempt) -> Iterator[Trajectory]:
@@ -769,13 +805,35 @@ class ContinuousScheduler:
         return max(min(MIN_ROUND_BUDGET, budget),
                    int(np.ceil(budget * frac)))
 
-    def _admission_blocks(self, prompt_len: int) -> int:
-        """Worst-case block footprint of admitting a task: its prompt plus
-        one full decode turn (0 for contiguous engines/doubles)."""
+    def _admission_blocks(self, session, token_ids: Sequence[int],
+                          seen=None) -> int:
+        """Worst-case block footprint of admitting a task: its context plus
+        one full decode turn (0 for contiguous engines/doubles), minus the
+        blocks prefix sharing will serve for free.
+
+        Group-aware admission: a prompt identical to one admitted earlier
+        in the *same* batched refill (``seen``) shares every full prompt
+        block with its leader — and its private tail copy-on-write is
+        exactly the tail block the remaining charge still counts — so it is
+        charged only ``blocks_for(len + turn) - len // page_size`` unique
+        blocks.  Cross-batch, the engine's radix probe
+        (``live_shared_blocks``) discounts full prompt blocks already
+        mapped by a live row (cached-but-unreferenced chains are NOT
+        discounted — mapping them consumes reclaimable capacity the
+        headroom math counts as free).
+        """
         if not hasattr(self.engine, "blocks_for"):
             return 0
-        return self.engine.blocks_for(prompt_len
+        need = self.engine.blocks_for(len(token_ids)
                                       + self.config.max_new_tokens)
+        bs = int(getattr(self.engine, "page_size", 0) or 0)
+        if bs and seen is not None and tuple(token_ids) in seen \
+                and getattr(self.engine, "prefix_sharing", False):
+            return max(0, need - len(token_ids) // bs)
+        if session is not None and hasattr(self.engine,
+                                           "live_shared_blocks"):
+            need -= int(self.engine.live_shared_blocks(session, token_ids))
+        return max(0, need)
 
     def _can_admit(self, session, need: int, claimed: int = 0) -> bool:
         """Free-block admission gate (always true for contiguous caches):
@@ -791,17 +849,20 @@ class ContinuousScheduler:
 
     def _initial_admissible(self, jobs: List[_Job]) -> int:
         """How many of the first jobs fit the configured block pool at once
-        (worst case: prompt + one full turn each).  Unlimited for contiguous
-        engines or auto-sized pools."""
+        (worst case: prompt + one full turn each; identical prompts —
+        GRPO groups — charge their shared full prompt blocks once, since
+        the initial ``engine.start`` prefills them all in one sharing
+        batch).  Unlimited for contiguous engines or auto-sized pools."""
         total = getattr(self.engine, "total_blocks", None)
         if total is None:
             return len(jobs)
-        budget = self.config.max_new_tokens
+        seen: set = set()
         acc = n = 0
         for job in jobs:
-            acc += self.engine.blocks_for(len(job.prompt_ids) + budget)
+            acc += self._admission_blocks(None, job.prompt_ids, seen)
             if acc > total:
                 break
+            seen.add(tuple(job.prompt_ids))
             n += 1
         return max(1, n)
 

@@ -429,7 +429,8 @@ class RLTrainer:
                   "cache_utilization_peak", "min_round_budget",
                   "adaptive_rounds", "admission_deferrals", "evictions",
                   "preemptions", "swap_out", "swap_in",
-                  "weight_refreshes"):
+                  "weight_refreshes", "prefix_hit_rate", "shared_blocks",
+                  "cow_count", "prefix_evictions"):
             if k in sched:
                 out[f"rollout/{k}"] = float(sched[k])
         return out

@@ -202,6 +202,14 @@ def _paged_scatter(cache: dict, kv_leaves: dict, positions: jax.Array,
     the trash block — the last pool block, which no table ever references
     with a valid id — so a pad can never touch a live block.  int8 pools
     (marked by a ``<leaf>_scale`` companion) quantize on write.
+
+    Prefix-sharing contract: this scatter writes through whatever mapping
+    the table holds and must NEVER be handed a *shared* one (a block
+    refcounted into several rows' tables) — the serving engine's host-side
+    copy-on-write barrier (``GenerationEngine._cow_range``) remaps the row
+    to a private slab copy *before* the device step that reaches here.
+    Reads (`_paged_gather` and the Pallas kernel) go through the table
+    unchanged: sharing is invisible to them by construction.
     """
     bs = cache["pos"].shape[1]
     trash = cache["pos"].shape[0] - 1

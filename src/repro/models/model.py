@@ -225,6 +225,47 @@ class PagedCache(CachePolicy):
                             for cl in cache["dense"]]
         return out
 
+    def _copy_paged(self, paged: dict, src: jax.Array, dst: jax.Array,
+                    stack: bool) -> dict:
+        """Slab-copy ``src`` pool blocks onto ``dst`` in one per-layer paged
+        dict: every pool leaf (K/V values, int8 scales, ``pos``) moves so the
+        destination block is indistinguishable from the source to any reader.
+        ``table`` is host-owned and untouched (the allocator remaps it)."""
+        out = dict(paged)
+        for k, v in paged.items():
+            if k == "table":
+                continue
+            out[k] = v.at[:, dst].set(v[:, src]) if stack \
+                else v.at[dst].set(v[src])
+        return out
+
+    def copy_blocks(self, model, cache, src, dst):
+        """Copy-on-write primitive: duplicate pool blocks ``src`` -> ``dst``
+        across every attention layer (block tables are identical across
+        layers, so one logical CoW is one slab copy per layer-group).  The
+        engine calls this *before* the device step that would write through
+        a shared mapping — the paged scatter itself never needs to know a
+        block was shared."""
+        s = np.asarray(list(src), np.int32).reshape(-1)
+        d = np.asarray(list(dst), np.int32).reshape(-1)
+        if s.size == 0:
+            return cache
+        c = model.cfg
+        if c.family == "ssm":
+            return cache
+        s, d = jnp.asarray(s), jnp.asarray(d)
+        if c.family == "hybrid":
+            return {"stack": {
+                "mamba": cache["stack"]["mamba"],
+                "attn": self._copy_paged(cache["stack"]["attn"], s, d,
+                                         stack=True),
+            }}
+        out = {"stack": self._copy_paged(cache["stack"], s, d, stack=True)}
+        if "dense" in cache:
+            out["dense"] = [self._copy_paged(cl, s, d, stack=False)
+                            for cl in cache["dense"]]
+        return out
+
     def set_tables(self, cache, table: np.ndarray):
         """Broadcast a fresh host block table (B, T) into every ``table``
         leaf of the cache (tables are identical across layers)."""
@@ -382,6 +423,16 @@ class Model:
         """
         return (policy or ContiguousCache()).reset_rows(
             self, cache, rows, max_len, window, freed_blocks=freed_blocks)
+
+    def copy_cache_blocks(self, cache, src, dst,
+                          policy: Optional[CachePolicy] = None):
+        """Device-side copy-on-write: duplicate paged pool blocks ``src`` ->
+        ``dst`` in every attention layer (no-op under a contiguous policy).
+        Used by the serving engine when a row is about to write into a block
+        it shares with other rows (prefix sharing)."""
+        if not isinstance(policy, PagedCache):
+            return cache
+        return policy.copy_blocks(self, cache, src, dst)
 
     # ---------------------------------------------------------- dry-run inputs
     def input_specs(self, shape_name: str, variant: str = "baseline") -> dict:

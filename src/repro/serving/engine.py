@@ -66,18 +66,34 @@ refill several short queued tasks.  Admission hooks (``blocks_for`` /
 scheduler gate refills on free-block availability.  The contiguous layout
 (the default) is kept as the parity oracle; both produce token-identical
 results (tests/test_paged_cache.py).
+
+Prefix sharing (``prefix_sharing=True``, paged-only): the allocator
+refcounts blocks so one physical block can appear in many rows' tables.
+Identical prompts prefilled together (GRPO groups) collapse to one leader
+prefill — followers remap every leader block (partial tail included) and
+copy its ``last_logits`` — and a radix index (serving/prefix_index.py) over
+full-block token chains lets later prompts remap any previously prefilled
+prefix (system prompt, few-shot header, tool schemas), including the
+re-prefill of a swapped-out row on re-admission.  The first write into a
+shared block triggers host-side copy-on-write (allocate + device slab copy
++ remap) *before* the device step, so the paged scatter never writes
+through a shared mapping and decode stays token- and logprob-identical to
+unshared paging (tests/test_prefix_sharing.py).  Unreferenced radix chains
+stay *cached* (reclaimable, LRU-evicted under pool pressure), so
+``free_count`` still bounds admission.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model, PagedCache
+from repro.serving.prefix_index import RadixPrefixIndex
 
 BUCKET = 32
 
@@ -172,31 +188,70 @@ class WeightStore:
 
 
 class BlockAllocator:
-    """Host-side free-list allocator for the paged KV cache.
+    """Host-side refcounted allocator for the paged KV cache.
 
     Owns the (batch, max_blocks_per_row) block table; blocks are appended to
     a row on ``ensure`` (copy-free growth — extending a row never moves
-    existing blocks) and returned to the free list on ``free_rows``.  Device
-    tables are synced from :attr:`table` by the engine after any change.
+    existing blocks) and dereferenced on ``free_rows``.  Device tables are
+    synced from :attr:`table` by the engine after any change.
+
+    Prefix sharing (ROADMAP item 2): one physical block may appear in many
+    rows' tables — :attr:`refcount` counts the table references.  Every
+    block is in exactly one of three states:
+
+    * **free** — refcount 0, on the free list, K/V slab is garbage;
+    * **used** — refcount >= 1, mapped by at least one row;
+    * **cached** — refcount 0 but still registered in the radix
+      :attr:`prefix` index: its K/V is intact and a future prompt with the
+      same prefix can remap it for free.  Cached blocks are *reclaimable* —
+      ``free_count`` includes them (so scheduler admission math is
+      unchanged) and allocation evicts them LRU leaf-first when the free
+      list runs dry.  Evicted/garbage ids land in :attr:`pending_clear`
+      for the engine to pos-reset device-side before reuse.
+
+    ``map_shared`` appends already-filled blocks to a row (refcount++);
+    ``cow`` gives a row a private replacement for a shared block it is
+    about to write (the engine copies the K/V slab device-side).
     """
 
     def __init__(self, num_blocks: int, block_size: int, batch: int,
-                 max_blocks_per_row: int):
+                 max_blocks_per_row: int, prefix=None):
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._cached: set = set()   # refcount-0 blocks held by the radix
+        self.refcount = np.zeros((num_blocks,), np.int32)
         self.table = np.full((batch, max_blocks_per_row), -1, np.int32)
         self.n_blocks = np.zeros((batch,), np.int32)
+        self.prefix = prefix        # RadixPrefixIndex | None
         self.peak_used = 0
         self.dirty = False          # host table changed since last device sync
+        self.pending_clear: List[int] = []  # evicted ids awaiting pos-reset
+        # cumulative sharing counters (surfaced as rollout/* stats)
+        self.shared_maps = 0        # blocks mapped without prefill
+        self.cow_count = 0          # copy-on-write block copies
+        self.shared_tokens = 0      # prompt tokens served from shared blocks
+        self.prompt_tokens = 0      # prompt tokens submitted (from length 0)
+        self.peak_shared = 0        # max concurrent blocks with refcount > 1
 
     @property
     def free_count(self) -> int:
-        return len(self._free)
+        """Reclaimable blocks: truly free plus cached (evictable) ones."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def cached_count(self) -> int:
+        return len(self._cached)
 
     @property
     def used_count(self) -> int:
-        return self.num_blocks - len(self._free)
+        """Blocks currently mapped by at least one row."""
+        return self.num_blocks - self.free_count
+
+    @property
+    def shared_now(self) -> int:
+        """Blocks currently mapped by more than one row."""
+        return int(np.count_nonzero(self.refcount > 1))
 
     def blocks_for(self, n_tokens: int) -> int:
         return max(0, math.ceil(n_tokens / self.block_size))
@@ -205,34 +260,129 @@ class BlockAllocator:
         """Tokens the row can hold in its currently mapped blocks."""
         return int(self.n_blocks[row]) * self.block_size
 
+    def _pop_block(self) -> int:
+        """Take a block off the free list, evicting LRU cached radix chains
+        when it runs dry; -1 when nothing is reclaimable."""
+        if not self._free and self._cached:
+            evicted = self.prefix.evict(1, self.refcount)
+            self._cached.difference_update(evicted)
+            self.pending_clear.extend(evicted)
+            self._free.extend(evicted)
+        if not self._free:
+            return -1
+        return self._free.pop()
+
     def ensure(self, row: int, target_len: int) -> int:
         """Map blocks so ``row`` can hold ``target_len`` tokens; allocates as
         many of the missing blocks as the pool can supply and returns the
         resulting capacity (callers decide whether partial coverage is an
         error or a reason to shrink the decode budget)."""
         need = self.blocks_for(target_len) - int(self.n_blocks[row])
-        for _ in range(min(need, len(self._free))):
-            self.table[row, self.n_blocks[row]] = self._free.pop()
+        for _ in range(need):
+            b = self._pop_block()
+            if b < 0:
+                break
+            self.table[row, self.n_blocks[row]] = b
+            self.refcount[b] = 1
             self.n_blocks[row] += 1
             self.dirty = True
         self.peak_used = max(self.peak_used, self.used_count)
         return self.capacity(row)
 
+    def map_shared(self, row: int, block_ids: Sequence[int]) -> None:
+        """Append already-filled blocks to ``row``'s table (refcount++) —
+        the sharing primitive: no prefill, no copy, just a table remap.
+        Cached blocks come back to life (refcount 0 -> 1) with their K/V
+        intact."""
+        r = int(row)
+        for b in block_ids:
+            b = int(b)
+            self.table[r, self.n_blocks[r]] = b
+            if self.refcount[b] == 0:
+                self._cached.discard(b)
+            self.refcount[b] += 1
+            self.n_blocks[r] += 1
+        if len(block_ids):
+            self.dirty = True
+            self.shared_maps += len(block_ids)
+            self.peak_used = max(self.peak_used, self.used_count)
+            self.peak_shared = max(self.peak_shared, self.shared_now)
+
+    def cow(self, row: int, block_idx: int) -> Tuple[int, int]:
+        """Copy-on-write: give ``row`` a private block in table slot
+        ``block_idx`` (the old block stays with its other referents).
+        Returns ``(src, dst)`` for the engine's device-side slab copy; dst
+        is -1 when the pool has nothing reclaimable (caller backpressures).
+        """
+        r = int(row)
+        old = int(self.table[r, block_idx])
+        new = self._pop_block()
+        if new < 0:
+            return old, -1
+        self.refcount[new] = 1
+        self.refcount[old] -= 1        # precondition: refcount[old] > 1
+        self.table[r, block_idx] = new
+        self.dirty = True
+        self.cow_count += 1
+        self.peak_used = max(self.peak_used, self.used_count)
+        return old, new
+
     def free_rows(self, rows: Sequence[int]) -> List[int]:
-        """Return every block of ``rows`` to the pool; returns the freed ids
-        (the engine resets their ``pos`` entries device-side so a future
-        occupant can never attend stale K/V)."""
+        """Drop ``rows``' references to their blocks.  A block whose last
+        reference goes away is *freed* (returned so the engine pos-resets
+        it device-side) unless the radix index still holds it — then it
+        stays **cached** with its K/V intact for future prefix hits.  Blocks
+        still referenced by other rows survive untouched."""
         freed: List[int] = []
         for r in rows:
             r = int(r)
             n = int(self.n_blocks[r])
-            freed.extend(int(b) for b in self.table[r, :n])
+            for b in self.table[r, :n]:
+                b = int(b)
+                self.refcount[b] -= 1
+                if self.refcount[b] == 0:
+                    if self.prefix is not None and b in self.prefix:
+                        self._cached.add(b)
+                    else:
+                        freed.append(b)
             self.table[r, :] = -1
             self.n_blocks[r] = 0
+            if n:
+                self.dirty = True
         self._free.extend(freed)
-        if freed:
-            self.dirty = True
         return freed
+
+    def check(self) -> None:
+        """Invariant self-check (wired into the scheduler tests so churn
+        can never leak or double-free a shared block): every block is free
+        xor cached xor mapped; per-block table references sum to exactly
+        its refcount; ``used_count + free_count == num_blocks``."""
+        refs = np.zeros((self.num_blocks,), np.int64)
+        for r in range(self.table.shape[0]):
+            n = int(self.n_blocks[r])
+            row_blocks = self.table[r, :n]
+            assert np.all(row_blocks >= 0), f"row {r}: unmapped slot < n_blocks"
+            assert np.all(self.table[r, n:] == -1), \
+                f"row {r}: stale table entry past n_blocks"
+            np.add.at(refs, row_blocks, 1)
+        assert np.array_equal(refs, self.refcount), (
+            "refcount drift: table references "
+            f"{refs[refs != self.refcount]} != refcount "
+            f"{self.refcount[refs != self.refcount]} at blocks "
+            f"{np.nonzero(refs != self.refcount)[0]}")
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate ids on the free list"
+        assert not (free & self._cached), "block both free and cached"
+        for b in free | self._cached:
+            assert self.refcount[b] == 0, f"block {b} free/cached but mapped"
+        mapped = set(np.nonzero(self.refcount > 0)[0].tolist())
+        assert free | self._cached | mapped == set(range(self.num_blocks)), \
+            "leaked blocks: neither free, cached, nor mapped"
+        assert self.used_count + self.free_count == self.num_blocks
+        if self.prefix is not None:
+            self.prefix.check(self.refcount)
+            for b in self._cached:
+                assert b in self.prefix, f"cached block {b} not in the radix"
 
 
 @dataclasses.dataclass
@@ -310,7 +460,8 @@ class GenerationEngine:
                  kv_cache_dtype: str = "fp",
                  paged_kernel: Optional[bool] = None,
                  paged_interpret: Optional[bool] = None,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0,
+                 prefix_sharing: bool = True):
         """``cache_mode="paged"`` allocates KV memory as ``num_blocks`` blocks
         of ``page_size`` tokens shared by the whole batch (0 = one full
         ``max_len`` worth per row, i.e. the contiguous footprint — pass less
@@ -325,6 +476,16 @@ class GenerationEngine:
         (0 = off; rounded up to the bucket size) streams long prompts
         through fixed-width compute chunks that write the paged pool
         incrementally, bounding prefill compile shapes at the chunk width.
+
+        ``prefix_sharing`` (paged-only; on by default, inert in contiguous
+        mode) dedups prompt prefills: identical prompts prefilled together
+        share all their blocks (GRPO groups — the leader prefills once,
+        followers remap + copy its ``last_logits``), and a radix index over
+        full-block token chains lets *later* prompts remap any shared
+        prefix (system prompt, few-shot header) without recompute.  Shared
+        blocks are refcounted; the first write into one (the divergent
+        token) triggers copy-on-write, so decode stays token-identical to
+        unshared paging.
         """
         self.model = model
         self.weights = WeightStore(params)
@@ -345,6 +506,7 @@ class GenerationEngine:
         self.num_blocks = num_blocks
         self.kv_cache_dtype = kv_cache_dtype
         self.paged_interpret = paged_interpret
+        self.prefix_sharing = bool(prefix_sharing) and cache_mode == "paged"
         self.prefill_chunk = _bucket(prefill_chunk) if prefill_chunk else 0
         self._policy_knobs = dict(kv_dtype=kv_cache_dtype,
                                   use_kernel=paged_kernel,
@@ -457,15 +619,55 @@ class GenerationEngine:
                 reserve += max(0, a.blocks_for(target) - int(a.n_blocks[r]))
         return a.free_count - reserve
 
+    def prefix_stats(self, session: DecodeSession) -> Optional[dict]:
+        """Sharing observability (None when sharing is off/contiguous):
+        cumulative prompt-token hit rate, current/peak shared-block counts,
+        copy-on-write and radix-eviction counters."""
+        a = session.allocator
+        if a is None or a.prefix is None:
+            return None
+        return {
+            "prefix_hit_rate": a.shared_tokens / max(a.prompt_tokens, 1),
+            "shared_blocks": a.shared_now,
+            "shared_blocks_peak": a.peak_shared,
+            "cow_count": a.cow_count,
+            "shared_maps": a.shared_maps,
+            "cached_blocks": a.cached_count,
+            "prefix_evictions": a.prefix.evictions,
+        }
+
+    def live_shared_blocks(self, session: DecodeSession,
+                           prompt_ids: Sequence[int]) -> int:
+        """Full blocks of ``prompt_ids`` already resident AND referenced by
+        a live row — the blocks a group-aware admission needn't charge.
+        Cached-but-unreferenced radix blocks are *not* discounted: mapping
+        them consumes reclaimable pool capacity the admission math already
+        counts as free."""
+        a = session.allocator
+        if a is None or a.prefix is None or not len(prompt_ids):
+            return 0
+        ids = a.prefix.peek(list(prompt_ids),
+                            (len(prompt_ids) - 1) // a.block_size)
+        return sum(1 for b in ids if a.refcount[b] >= 1)
+
     def _sync_tables(self, session: DecodeSession) -> None:
         """Push the host block table into the device cache, but only when
         the allocator actually changed it — in the steady decode state
-        (every row's capacity already covers its budget) this is a no-op."""
-        if not session.allocator.dirty:
+        (every row's capacity already covers its budget) this is a no-op.
+        Blocks the radix index evicted since the last sync are pos-reset
+        here (their slabs hold stale K/V a future occupant must not see)."""
+        a = session.allocator
+        if a.pending_clear:
+            blocks, a.pending_clear = a.pending_clear, []
+            session.cache = self.model.reset_cache_rows(
+                session.cache, np.zeros((0,), np.int64), self.max_len,
+                self.window, policy=session.cache_policy,
+                freed_blocks=blocks)
+        if not a.dirty:
             return
         session.cache = session.cache_policy.set_tables(
-            session.cache, session.allocator.table)
-        session.allocator.dirty = False
+            session.cache, a.table)
+        a.dirty = False
 
     # ------------------------------------------------------------- impl fns
     def _prefill_impl(self, params, cache, tokens, positions, valid, cross_kv):
@@ -567,7 +769,10 @@ class GenerationEngine:
             n_blocks = self.num_blocks or B * per_row
             policy = PagedCache(block_size=self.page_size,
                                 num_blocks=n_blocks, **self._policy_knobs)
-            allocator = BlockAllocator(n_blocks, self.page_size, B, per_row)
+            prefix = (RadixPrefixIndex(self.page_size)
+                      if self.prefix_sharing else None)
+            allocator = BlockAllocator(n_blocks, self.page_size, B, per_row,
+                                       prefix=prefix)
             cache = self.model.init_cache(B, self.max_len, self.window,
                                           policy=policy)
         else:
@@ -587,6 +792,15 @@ class GenerationEngine:
     def extend(self, session: DecodeSession, new_tokens: List[List[int]]) -> None:
         """Prefill ragged per-row token lists into the session cache.
 
+        With ``prefix_sharing`` on (paged mode), rows prefilled from length
+        0 first go through the sharing plan: identical prompts in this call
+        collapse to one leader prefill (followers remap every leader block,
+        including the partial tail, and copy its ``last_logits``), and each
+        leader maps the longest radix-indexed full-block chain of its
+        prompt before prefilling only the unshared suffix.  Chunked prefill
+        therefore never recomputes a shared block — chunks stream only the
+        suffix.
+
         With ``prefill_chunk`` set, prompts longer than one chunk stream
         through fixed-width compute chunks: each chunk maps only the pool
         blocks it needs, prefills at a bounded (bucketed) width, and updates
@@ -602,13 +816,122 @@ class GenerationEngine:
                 f"context overflow: extend to {(session.lengths + lens).max()} "
                 f"tokens > engine max_len={self.max_len}; raise max_len or "
                 f"shorten prompts")
+        work, shared = self._share_prefixes(session, new_tokens)
+        wmax = max((len(t) for t in work), default=0)
         C = self.prefill_chunk
-        if C and int(lens.max()) > C:
-            for c0 in range(0, int(lens.max()), C):
+        if C and wmax > C:
+            for c0 in range(0, wmax, C):
                 self._extend_once(session,
-                                  [list(t[c0:c0 + C]) for t in new_tokens])
-        else:
-            self._extend_once(session, new_tokens)
+                                  [list(t[c0:c0 + C]) for t in work])
+        elif wmax:
+            self._extend_once(session, work)
+        if shared is not None:
+            self._finish_sharing(session, shared)
+
+    def _share_prefixes(self, session: DecodeSession,
+                        new_tokens: List[List[int]]):
+        """Sharing plan for one ``extend``: returns ``(work, plan)`` where
+        ``work`` is what actually needs prefilling (followers of an
+        identical prompt drop to ``[]``, radix-hit rows to their unshared
+        suffix) and ``plan`` carries the post-prefill bookkeeping for
+        :meth:`_finish_sharing`.  Only rows starting from length 0 are
+        share-eligible: their token list IS their full context, so full
+        blocks can be keyed by absolute position in the radix.
+
+        Radix lookups are capped at full blocks covering at most
+        ``len(prompt) - 1`` tokens, so a leader always prefills >= 1 token
+        and its ``last_logits`` come from a real forward of its own row.
+        """
+        a = session.allocator
+        if a is None or a.prefix is None:
+            return new_tokens, None
+        bs = a.block_size
+        work = [list(t) for t in new_tokens]
+        leaders: dict = {}          # prompt tuple -> leader row
+        followers: List[Tuple[int, int, int]] = []   # (row, leader, n_tok)
+        registrations: List[Tuple[int, List[int]]] = []
+        for i, t in enumerate(new_tokens):
+            if len(t) == 0 or int(session.lengths[i]) != 0:
+                continue
+            a.prompt_tokens += len(t)
+            key = tuple(t)
+            lead = leaders.get(key)
+            if lead is not None:
+                # group member: share EVERYTHING (partial tail included) and
+                # skip prefill entirely; the tail copy-on-writes on the
+                # first decoded token
+                followers.append((i, lead, len(t)))
+                work[i] = []
+                a.shared_tokens += len(t)
+                continue
+            leaders[key] = i
+            hit = a.prefix.lookup(t, (len(t) - 1) // bs)
+            if hit:
+                a.map_shared(i, hit)
+                n_hit = len(hit) * bs
+                session.lengths[i] += n_hit
+                a.shared_tokens += n_hit
+                work[i] = list(t[n_hit:])
+            registrations.append((i, list(t)))
+        return work, (followers, registrations)
+
+    def _finish_sharing(self, session: DecodeSession, plan) -> None:
+        """Post-prefill half of the sharing plan: register every leader's
+        full prompt blocks in the radix (now that they hold real K/V), then
+        map followers onto their leader's blocks and copy its
+        ``last_logits`` — an identical prompt under identical params yields
+        identical logits, so the follower's decode is indistinguishable
+        from having prefilled itself."""
+        followers, registrations = plan
+        a = session.allocator
+        for row, toks in registrations:
+            n_full = len(toks) // a.block_size
+            if n_full:
+                a.prefix.insert(toks,
+                                [int(b) for b in a.table[row, :n_full]])
+        if followers:
+            for row, lead, n in followers:
+                a.map_shared(row, [int(b)
+                                   for b in a.table[lead, :a.blocks_for(n)]])
+                session.lengths[row] += n
+            rows = jnp.asarray([f[0] for f in followers])
+            leads = jnp.asarray([f[1] for f in followers])
+            session.last_logits = session.last_logits.at[rows].set(
+                session.last_logits[leads])
+        if a.dirty:
+            self._sync_tables(session)
+
+    def _cow_range(self, session: DecodeSession, row: int, start: int,
+                   end: int) -> bool:
+        """Host-side copy-on-write barrier: before any device write to
+        positions ``[start, end)`` of ``row``, replace each block in that
+        range the row shares with other rows (refcount > 1) by a private
+        copy — allocate, slab-copy the K/V device-side, remap the row's
+        table slot.  Radix-indexed *full* blocks never appear in a write
+        range (writes start at the row's length, past every full block), so
+        only group-shared partial tails ever copy.  Returns False when the
+        pool cannot supply a replacement (caller backpressures; completed
+        copies stay valid)."""
+        a = session.allocator
+        if a is None or end <= start:
+            return True
+        bs = a.block_size
+        b1 = min((end - 1) // bs, int(a.n_blocks[row]) - 1)
+        src: List[int] = []
+        dst: List[int] = []
+        ok = True
+        for bi in range(start // bs, b1 + 1):
+            if a.refcount[int(a.table[row, bi])] > 1:
+                s, d = a.cow(row, bi)
+                if d < 0:
+                    ok = False
+                    break
+                src.append(s)
+                dst.append(d)
+        if src:
+            session.cache = self.model.copy_cache_blocks(
+                session.cache, src, dst, policy=session.cache_policy)
+        return ok
 
     def _extend_once(self, session: DecodeSession,
                      new_tokens: List[List[int]]) -> None:
@@ -623,8 +946,10 @@ class GenerationEngine:
             for i, n in enumerate(lens):
                 if n == 0:
                     continue
-                target = int(session.lengths[i]) + int(n)
-                if session.allocator.ensure(i, target) < target:
+                start = int(session.lengths[i])
+                target = start + int(n)
+                if session.allocator.ensure(i, target) < target \
+                        or not self._cow_range(session, i, start, target):
                     raise RuntimeError(
                         f"paged KV pool exhausted: row {i} needs "
                         f"{session.allocator.blocks_for(target)} blocks, "
@@ -756,6 +1081,13 @@ class GenerationEngine:
                 target = min(cur + int(budgets[r]), self.max_len)
                 cap = session.allocator.ensure(r, target)
                 budgets[r] = max(0, min(int(budgets[r]), cap - cur))
+                # copy-on-write barrier: the first decoded token may land in
+                # a block shared with the row's prompt-group (the partial
+                # tail); give the row a private copy before the device loop
+                # writes.  A failed copy starves the row this call.
+                if budgets[r] > 0 and not self._cow_range(
+                        session, r, cur, cur + int(budgets[r])):
+                    budgets[r] = 0
             self._sync_tables(session)
         stop_arr = jnp.asarray(np.asarray(self.stop_ids, np.int32)
                                .reshape(-1))
@@ -817,6 +1149,10 @@ class GenerationEngine:
                 target = min(cur + int(budgets[r]), self.max_len)
                 cap = session.allocator.ensure(r, target)
                 budgets[r] = max(0, min(int(budgets[r]), cap - cur))
+                # same CoW barrier as the fused path (parity oracle)
+                if budgets[r] > 0 and not self._cow_range(
+                        session, r, cur, cur + int(budgets[r])):
+                    budgets[r] = 0
             self._sync_tables(session)
         active = (~session.stopped & (session.lengths < self.max_len - 1)
                   & (budgets > 0))

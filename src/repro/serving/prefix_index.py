@@ -1,0 +1,185 @@
+"""Radix prefix index: token-id chains -> physical KV block chains.
+
+Cross-task prefix sharing for the paged KV cache (ROADMAP item 2): at
+million-user scale nearly every request opens with the same system prompt /
+few-shot header / tool schemas, and every GRPO group member shares its task
+prompt.  PR 3's block tables make reusing those prefixes free *if* we can
+find them — this module is the find.
+
+Structure: a trie whose edges are **full-block token tuples** (``block_size``
+ids per edge) and whose nodes each own one physical pool block.  A chain of
+nodes from the root therefore describes both a token prefix and the exact
+pool blocks holding its K/V — and because positions are absolute from 0, a
+block at chain depth ``d`` holds positions ``[d*bs, (d+1)*bs)`` for *every*
+row that maps it, so a radix hit is a pure block-table remap with no
+recompute and no position fixup.
+
+Only **full** blocks are indexed; full prompt blocks are write-immutable
+(the engine always writes at positions >= the row's current length, which
+lands in the partial tail block or beyond), so an indexed block's K/V can
+never change under a reader and insertion never needs copy-on-write.
+
+Lifecycle / eviction: the index holds chains whose blocks may have live
+table references (refcount >= 1 in ``BlockAllocator``) or none (refcount 0:
+*cached*, reclaimable).  Refcounts along a chain are monotone non-increasing
+toward the leaves (a row referencing a node references all its ancestors),
+so :meth:`evict` reclaims LRU zero-refcount **leaves** first — evicting a
+leaf can expose its parent as the next candidate, never orphan a child.
+Lookups and inserts bump a monotone logical clock (no wall time).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class _Node:
+    __slots__ = ("children", "parent", "edge", "block", "last_use")
+
+    def __init__(self, parent: Optional["_Node"], edge: Optional[tuple],
+                 block: int, last_use: int):
+        self.children: Dict[tuple, "_Node"] = {}
+        self.parent = parent
+        self.edge = edge            # the block_size-token tuple keying us
+        self.block = block          # physical pool block id (-1 = root)
+        self.last_use = last_use
+
+
+class RadixPrefixIndex:
+    """token-id prefix -> chain of physical block ids, with LRU eviction.
+
+    Counters (cumulative over the index lifetime):
+
+    * ``hit_blocks`` / ``lookup_blocks`` — full blocks served from the index
+      vs. full blocks that lookups asked for (block-level hit rate);
+    * ``evictions`` — cached blocks reclaimed under pool pressure.
+    """
+
+    def __init__(self, block_size: int):
+        if block_size <= 0:
+            raise ValueError(f"block_size must be positive, got {block_size}")
+        self.block_size = block_size
+        self._root = _Node(None, None, -1, 0)
+        self._by_block: Dict[int, _Node] = {}
+        self._clock = 0
+        self.hit_blocks = 0
+        self.lookup_blocks = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return len(self._by_block)
+
+    def __contains__(self, block: int) -> bool:
+        return int(block) in self._by_block
+
+    def _chunks(self, tokens: Sequence[int], max_blocks: int):
+        bs = self.block_size
+        n = min(len(tokens) // bs, max(0, max_blocks))
+        for i in range(n):
+            yield tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+
+    def _walk(self, tokens: Sequence[int], max_blocks: int) -> List[_Node]:
+        node, path = self._root, []
+        for chunk in self._chunks(tokens, max_blocks):
+            node = node.children.get(chunk)
+            if node is None:
+                break
+            path.append(node)
+        return path
+
+    def peek(self, tokens: Sequence[int], max_blocks: int) -> List[int]:
+        """Longest indexed full-block chain matching ``tokens`` (<=
+        ``max_blocks`` blocks) — non-mutating: no LRU bump, no counters.
+        Used by admission probes, which must not skew stats or keep chains
+        warm that no prefill ever mapped."""
+        return [n.block for n in self._walk(tokens, max_blocks)]
+
+    def lookup(self, tokens: Sequence[int], max_blocks: int) -> List[int]:
+        """Longest indexed chain for ``tokens``; bumps the matched chain's
+        LRU clock and the hit/lookup counters.  Callers map the returned
+        blocks into a row's table (refcount++ in the allocator) *before*
+        prefilling the unmatched suffix."""
+        want = min(len(tokens) // self.block_size, max(0, max_blocks))
+        path = self._walk(tokens, max_blocks)
+        self._clock += 1
+        for n in path:
+            n.last_use = self._clock
+        self.lookup_blocks += want
+        self.hit_blocks += len(path)
+        return [n.block for n in path]
+
+    # ------------------------------------------------------------ mutation
+    def insert(self, tokens: Sequence[int], block_ids: Sequence[int]) -> int:
+        """Register ``tokens``' full blocks as the chain ``block_ids``.
+
+        Existing nodes keep their block (first writer wins — a later
+        identical prefix that somehow prefilled privately just stays
+        private and unindexed); returns the number of newly indexed blocks.
+        ``block_ids`` aligns with the full blocks of ``tokens`` and may be
+        shorter (register only a prefix of the chain).
+        """
+        self._clock += 1
+        node, added = self._root, 0
+        for chunk, blk in zip(self._chunks(tokens, len(block_ids)),
+                              block_ids):
+            child = node.children.get(chunk)
+            if child is None:
+                child = _Node(node, chunk, int(blk), self._clock)
+                node.children[chunk] = child
+                self._by_block[int(blk)] = child
+                added += 1
+            child.last_use = self._clock
+            node = child
+        return added
+
+    def _remove(self, node: _Node) -> None:
+        del node.parent.children[node.edge]
+        del self._by_block[node.block]
+
+    def evict(self, n: int, refcount) -> List[int]:
+        """Reclaim up to ``n`` blocks: LRU-first among zero-refcount leaves
+        (re-checking leaf-ness after each removal, so a chain can drain tail
+        to head in one call).  Returns the evicted block ids — their pool
+        slabs hold stale K/V and must be pos-cleared before reuse (the
+        engine routes them through ``reset_cache_rows(freed_blocks=...)``).
+        """
+        out: List[int] = []
+        while len(out) < n:
+            victim = None
+            for node in self._by_block.values():
+                if node.children or refcount[node.block] != 0:
+                    continue
+                if victim is None or node.last_use < victim.last_use:
+                    victim = node
+            if victim is None:
+                break
+            self._remove(victim)
+            out.append(victim.block)
+        self.evictions += len(out)
+        return out
+
+    # ---------------------------------------------------------- invariants
+    def check(self, refcount) -> None:
+        """Structural self-check: parent links consistent, every indexed
+        block maps to exactly one node, and refcounts are monotone
+        non-increasing from parent to child (the property LRU leaf-first
+        eviction relies on)."""
+        seen = set()
+
+        def rec(node: _Node):
+            for edge, child in node.children.items():
+                assert child.parent is node and child.edge == edge
+                assert self._by_block.get(child.block) is child, \
+                    f"block {child.block} not indexed to its node"
+                assert child.block not in seen, \
+                    f"block {child.block} on two chains"
+                seen.add(child.block)
+                if node is not self._root:
+                    assert refcount[child.block] <= refcount[node.block], (
+                        f"refcount inversion: child block {child.block} "
+                        f"({refcount[child.block]}) > parent {node.block} "
+                        f"({refcount[node.block]})")
+                rec(child)
+
+        rec(self._root)
+        assert seen == set(self._by_block), "orphaned index entries"

@@ -234,6 +234,11 @@ def test_preemption_swaps_instead_of_killing(gqa_setup):
     assert stats["swap_in"] >= 1              # and every victim came back
     assert stats["swap_in"] == stats["swap_out"]
     assert stats["evictions"] == 0            # nothing was killed for blocks
+    # prefix sharing stayed live under swap pressure: group members (and
+    # swap-in re-prefills) served their prompts from shared blocks, and the
+    # allocator invariant check in the scheduler's finally block passed
+    assert stats["prefix_hit_rate"] > 0.0
+    assert stats["cow_count"] >= 0 and stats["prefix_evictions"] >= 0
     for a, b in zip(trajs, ref):
         assert a.tokens() == b.tokens()
         assert a.stop_reason == b.stop_reason == "tool_budget"

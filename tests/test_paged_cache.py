@@ -151,9 +151,12 @@ def test_zero_free_blocks_backpressure(gqa_setup):
                                       group_size=2, mode="reference")
                         ).rollout(tasks, jax.random.PRNGKey(7))
 
+    # prefix sharing off: group members would legitimately share their prompt
+    # blocks and fit up-front, which is exactly the pressure this test needs
     eng = GenerationEngine(model, params, pad_id=tok.pad_id,
                            stop_ids=(tok.eos_id,), max_len=512,
-                           cache_mode="paged", page_size=16, num_blocks=14)
+                           cache_mode="paged", page_size=16, num_blocks=14,
+                           prefix_sharing=False)
     worker = RolloutWorker(eng, env, tok,
                            RolloutConfig(max_turns=3, max_new_tokens=16,
                                          group_size=2, mode="continuous",
