@@ -23,6 +23,7 @@ REGISTRY = (
     ("prefix_sharing", "bench_prefix_sharing"),
     ("decode_roofline", "bench_decode_roofline"),
     ("kernels", "bench_kernels"),
+    ("obs_overhead", "bench_obs_overhead"),
     ("fig5_training_curve", "bench_training_curve"),
     ("roofline", "roofline"),
 )

@@ -4,12 +4,14 @@
 #   scripts/check.sh            # from anywhere inside the repo
 #
 # Runs the non-slow pytest tier (the ROADMAP tier-1 set minus the long
-# integration runs) and then imports every registered benchmark via
+# integration runs), imports every registered benchmark via
 # `benchmarks/run.py --list` so a broken registry entry fails fast without
-# paying for an actual benchmark run.
+# paying for an actual benchmark run, and finishes with the trace smoke: a
+# tiny traced rollout whose exported Chrome trace is schema-validated.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src python -m pytest -m "not slow" -q
 PYTHONPATH=src:. python benchmarks/run.py --list
+PYTHONPATH=src:. python scripts/trace_smoke.py
 echo "check.sh: all green"

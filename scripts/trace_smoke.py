@@ -1,0 +1,128 @@
+"""Trace smoke (scripts/check.sh): run a tiny traced rollout end-to-end on
+the real engine and validate the exported Chrome trace.
+
+Every trajectory is forced through at least one tool call (the manager
+wrapper below always parses a ``sleep`` call on every turn), so the trace
+must contain ``prefill``, ``decode_round``, ``tool_wait`` and — for every
+trajectory — a ``retire`` span.  Exits non-zero with a diagnostic if the
+export is missing, fails schema validation, or lacks any required span.
+
+    PYTHONPATH=src:. python scripts/trace_smoke.py [--trace-dir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import glob
+import json
+import os
+import sys
+
+import jax
+
+from repro import obs
+from repro.configs import get_config
+from repro.core.rollout import RolloutConfig, RolloutWorker
+from repro.data.tokenizer import default_tokenizer
+from repro.models import Model
+from repro.serving.engine import GenerationEngine
+from repro.tools.envs import Env
+from repro.tools.manager import Qwen3ToolManager
+from repro.tools.registry import ToolCall, ToolRegistry, ToolSpec
+
+
+class ForceCallManager:
+    """Wraps the real manager but parses every model turn as one ``sleep``
+    tool call — the tiny random-weight model never emits a well-formed call
+    on its own, and the smoke needs tool_wait spans for every trajectory."""
+
+    def __init__(self, inner):
+        self.inner = inner
+
+    def get_prompt(self, question):
+        return self.inner.get_prompt(question)
+
+    def format_observation(self, results):
+        return self.inner.format_observation(results)
+
+    def parse_response(self, text):
+        return [ToolCall("sleep", {"ms": 5})], None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace-dir", default=os.path.join("results", "trace"))
+    args = ap.parse_args(argv)
+
+    reg = ToolRegistry()
+
+    async def sleep(ms):
+        await asyncio.sleep(float(ms) / 1000.0)
+        return f"slept {ms}ms"
+
+    reg.register(ToolSpec(name="sleep", fn=sleep,
+                          parameters={"ms": {"required": True}}))
+    env = Env(reg, ForceCallManager(Qwen3ToolManager(reg, compact=True)),
+              max_tool_calls=8)
+
+    cfg = get_config("tiny")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = default_tokenizer(cfg.vocab_size)
+
+    before = set(glob.glob(os.path.join(args.trace_dir, "*.trace.json")))
+    with obs.scoped(trace=True, trace_dir=args.trace_dir):
+        engine = GenerationEngine(model, params, pad_id=tok.pad_id,
+                                  stop_ids=(tok.eos_id,), max_len=512)
+        worker = RolloutWorker(
+            engine, env, tok,
+            RolloutConfig(max_turns=2, max_new_tokens=8, group_size=2,
+                          n_slots=2))
+        tasks = [("what is A?", "a"), ("what is B?", "b")]
+        trajs = worker.rollout(tasks, jax.random.PRNGKey(0))
+        stats = worker.last_stats
+
+    new = sorted(set(glob.glob(os.path.join(args.trace_dir,
+                                            "*.trace.json"))) - before)
+    if not new:
+        print(f"trace_smoke: FAIL — no trace exported to {args.trace_dir}")
+        return 1
+    path = new[-1]
+    with open(path) as f:
+        obj = json.load(f)
+
+    errs = obs.validate_chrome_trace(obj)
+    if errs:
+        print(f"trace_smoke: FAIL — {path} invalid:")
+        for e in errs[:10]:
+            print(f"  {e}")
+        return 1
+
+    spans = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+    by_name = {}
+    for e in spans:
+        by_name.setdefault(e["name"], []).append(e)
+    missing = [n for n in ("prefill", "decode_round", "tool_wait", "retire")
+               if n not in by_name]
+    if missing:
+        print(f"trace_smoke: FAIL — {path} lacks spans: {missing} "
+              f"(has: {sorted(by_name)})")
+        return 1
+    n_retire = len(by_name["retire"])
+    if n_retire != len(trajs):
+        print(f"trace_smoke: FAIL — {n_retire} retire spans for "
+              f"{len(trajs)} trajectories")
+        return 1
+    if stats.get("tool_wait_s", 0.0) <= 0.0:
+        print("trace_smoke: FAIL — rollout stats report no tool wait")
+        return 1
+
+    print(f"trace_smoke: OK — {os.path.basename(path)}: {len(spans)} spans "
+          f"({', '.join(f'{n}x{len(v)}' for n, v in sorted(by_name.items()))}), "
+          f"{len(trajs)} trajectories, "
+          f"tool_wait_s={stats['tool_wait_s']:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,22 +24,40 @@ import threading
 import time
 from typing import List, Optional, Sequence
 
+from repro import obs
 from repro.tools.background import BackgroundLoop as _BackgroundLoop
 from repro.tools.registry import ToolCall, ToolRegistry, ToolResult
 
 
 class AsyncToolExecutor:
-    """asyncio fan-out across the whole batch of per-trajectory call lists."""
+    """asyncio fan-out across the whole batch of per-trajectory call lists.
+
+    Execution accounting lives in typed instruments on a per-executor
+    metrics registry (forwarded to the process-wide one under ``tool/*``);
+    the historical ``stats`` dict survives as a read-only view for
+    benchmarks and tests.
+    """
 
     def __init__(self, registry: ToolRegistry, max_concurrency: int = 128):
         self.registry = registry
         self.max_concurrency = max_concurrency
-        self.stats = {"batches": 0, "calls": 0, "wall_s": 0.0, "tool_s": 0.0}
-        self._stats_lock = threading.Lock()
+        self.metrics = obs.MetricsRegistry(parent=obs.get().registry)
+        self._m_batches = self.metrics.counter("tool/exec_batches")
+        self._m_calls = self.metrics.counter("tool/exec_calls")
+        self._m_wall = self.metrics.timer("tool/exec_wall_s")
+        self._m_tool_s = self.metrics.counter("tool/exec_tool_s")
         self._inflight: List[concurrent.futures.Future] = []
         self._inflight_lock = threading.Lock()
         self._row_sem = None          # (loop, asyncio.Semaphore) pair
         self._sem_lock = threading.Lock()
+
+    @property
+    def stats(self) -> dict:
+        """Legacy dict view of the execution instruments."""
+        return {"batches": int(self._m_batches.value),
+                "calls": int(self._m_calls.value),
+                "wall_s": self._m_wall.sum,
+                "tool_s": self._m_tool_s.value}
 
     async def _guarded(self, sem: asyncio.Semaphore, call: ToolCall) -> ToolResult:
         async with sem:
@@ -59,11 +77,10 @@ class AsyncToolExecutor:
             out[i].append(r)
         for row in out:  # stable order by call_id within a trajectory
             row.sort(key=lambda r: r.call_id)
-        with self._stats_lock:
-            self.stats["batches"] += 1
-            self.stats["calls"] += len(flat)
-            self.stats["wall_s"] += wall
-            self.stats["tool_s"] += sum(r.latency_s for r in results)
+        self._m_batches.add()
+        self._m_calls.add(len(flat))
+        self._m_wall.observe(wall)
+        self._m_tool_s.add(sum(r.latency_s for r in results))
         return out
 
     def execute_batch(self, batch_calls: Sequence[List[ToolCall]]
@@ -94,10 +111,9 @@ class AsyncToolExecutor:
         results = list(await asyncio.gather(
             *(self._guarded(sem, c) for c in calls)))
         results.sort(key=lambda r: r.call_id)
-        with self._stats_lock:
-            self.stats["calls"] += len(calls)
-            self.stats["wall_s"] += time.monotonic() - t0
-            self.stats["tool_s"] += sum(r.latency_s for r in results)
+        self._m_calls.add(len(calls))
+        self._m_wall.observe(time.monotonic() - t0)
+        self._m_tool_s.add(sum(r.latency_s for r in results))
         return results
 
     def submit(self, calls: Sequence[ToolCall]) -> concurrent.futures.Future:
@@ -153,7 +169,7 @@ class AsyncToolExecutor:
     @property
     def overlap_factor(self) -> float:
         """sum(individual tool latencies) / wall time — >1 proves overlap."""
-        return self.stats["tool_s"] / max(self.stats["wall_s"], 1e-9)
+        return self._m_tool_s.value / max(self._m_wall.sum, 1e-9)
 
 
 class SerialToolExecutor:

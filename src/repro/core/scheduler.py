@@ -102,6 +102,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
+import os
 import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -109,10 +110,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.mdp import Role, Trajectory
 from repro.tools.registry import ToolResult
 
 MIN_ROUND_BUDGET = 8        # adaptive floor: never shrink a round below this
+
+# ``REPRO_JAX_PROFILE=<dir>`` wraps the first traced scheduler rounds of the
+# process in jax.profiler for device-side correlation with the span
+# timeline.  Once per process: profiles are heavyweight and one window is
+# what you correlate against.
+_JAX_PROFILE_ROUNDS = int(os.environ.get("REPRO_JAX_PROFILE_ROUNDS", "8"))
+_jax_profile = {"started": False, "stopped": False}
+
+
+def _jax_profile_start() -> bool:
+    d = os.environ.get("REPRO_JAX_PROFILE")
+    if not d or _jax_profile["started"]:
+        return False
+    jax.profiler.start_trace(d)
+    _jax_profile["started"] = True
+    return True
+
+
+def _jax_profile_stop() -> None:
+    if _jax_profile["started"] and not _jax_profile["stopped"]:
+        _jax_profile["stopped"] = True
+        jax.profiler.stop_trace()
 
 
 def order_by_job_index(trajs: List[Trajectory]) -> List[Trajectory]:
@@ -131,6 +155,42 @@ def order_by_job_index(trajs: List[Trajectory]) -> List[Trajectory]:
 _fold_rows = jax.jit(jax.vmap(jax.random.fold_in))
 
 
+class _StreamMetrics:
+    """One trajectory stream's instruments, on a child registry forwarding
+    to the process-wide one under ``rollout/`` — per-stream values stay
+    exact (they feed ``last_stats``) while the global registry accumulates
+    across streams for ``/api/metrics``."""
+
+    _UTIL_BOUNDS = tuple(i / 20 for i in range(1, 20))   # 0.05 .. 0.95
+
+    def __init__(self, turn_budget: float):
+        self.reg = r = obs.MetricsRegistry(parent=obs.get().registry,
+                                           parent_prefix="rollout/")
+        self.rounds = r.counter("rounds")
+        self.gen_s = r.counter("gen_s")
+        self.tool_wait = r.timer("tool_wait_s")
+        self.tool_s = r.counter("tool_latency_s")
+        self.tool_timeouts = r.counter("tool_timeouts")
+        self.refills = r.counter("refills")
+        self.active_slot_rounds = r.counter("active_slot_rounds")
+        self.slot_rounds = r.counter("slot_rounds")
+        self.model_tokens = r.counter("model_tokens")
+        self.min_round_budget = r.gauge("min_round_budget")
+        self.min_round_budget.set(float(turn_budget))
+        self.adaptive_rounds = r.counter("adaptive_rounds")
+        self.admission_deferrals = r.counter("admission_deferrals")
+        self.starved_rounds = r.counter("starved_rounds")
+        self.evictions = r.counter("evictions")
+        self.preemptions = r.counter("preemptions")
+        self.swap_out = r.counter("swap_out")
+        self.swap_in = r.counter("swap_in")
+        self.weight_refreshes = r.counter("weight_refreshes")
+        self.cache_util = r.histogram("cache_utilization",
+                                      bounds=self._UTIL_BOUNDS)
+        self.decode_round = r.timer("decode_round_s")
+        self.admission_wait = r.timer("admission_wait_s")
+
+
 class SlotState(enum.Enum):
     FREE = "free"          # no occupant; session row is stopped
     ACTIVE = "active"      # decoding in the fused loop
@@ -147,6 +207,8 @@ class _Job:
     versions: set = dataclasses.field(default_factory=set)
     #                                 weight versions that sampled any of this
     #                                 trajectory's tokens (pinned until retire)
+    enqueued_at: float = 0.0        # tracer time when the job entered the queue
+    deferred_at: Optional[float] = None   # first admission deferral (wall)
 
 
 @dataclasses.dataclass
@@ -165,6 +227,8 @@ class _Slot:
     #                                  weight version (parallel to turn_toks)
     pending_obs: Optional[list] = None   # landed obs waiting for cache blocks
     lane_clean: bool = True         # cache lane reset since the last occupant
+    admit_t: float = 0.0            # tracer time the occupant took this slot
+    park_t: float = 0.0             # tracer time the occupant last parked
 
 
 @dataclasses.dataclass
@@ -184,6 +248,7 @@ class _Swapped:
     calls: list
     future: object = None                # still-in-flight tool future
     pending_obs: Optional[list] = None   # obs that landed while swapped out
+    park_t: float = 0.0                  # tracer time the row last parked
 
 
 class ContinuousScheduler:
@@ -229,7 +294,10 @@ class ContinuousScheduler:
         jobs = self._build_jobs(tasks, key, gs)
         n_jobs = len(jobs)
         if n_jobs == 0:
-            self.last_stats = {}
+            # even the degenerate stream reports the full key set
+            self.last_stats = self._finalize_stats(
+                _StreamMetrics(self.config.max_new_tokens), None,
+                n_slots=0, n_trajectories=0, wall=0.0)
             return
         queue = collections.deque(jobs)
         B = max(1, min(self.n_slots or n_jobs, n_jobs))
@@ -243,19 +311,27 @@ class ContinuousScheduler:
             slot.turn_idx = 0
 
         by_future: Dict[object, _Slot] = {}
-        stats = {"rounds": 0.0, "gen_s": 0.0, "tool_wait_s": 0.0,
-                 "tool_s": 0.0, "refills": 0.0, "active_slot_rounds": 0.0,
-                 "slot_rounds": 0.0, "model_tokens": 0.0,
-                 "min_round_budget": float(self.config.max_new_tokens),
-                 "adaptive_rounds": 0.0, "admission_deferrals": 0.0,
-                 "starved_rounds": 0.0, "evictions": 0.0,
-                 "preemptions": 0.0, "swap_out": 0.0, "swap_in": 0.0,
-                 "util_sum": 0.0, "util_rounds": 0.0, "util_peak": 0.0,
-                 "weight_refreshes": 0.0}
+        m = _StreamMetrics(self.config.max_new_tokens)
+        trc = obs.get().tracer
+        if trc.enabled:
+            t_q = trc.now()
+            for j in jobs:
+                j.enqueued_at = t_q
+            for slot, job in zip(slots, first):
+                slot.admit_t = t_q
+                trc.complete("queue", "queued", job.enqueued_at, t_q,
+                             job=job.index)
         t_start = time.monotonic()
         retired: List[Trajectory] = []
         to_refill: List[_Slot] = []
         swapped: collections.deque = collections.deque()  # _Swapped records
+
+        def admit_wait(job: _Job) -> None:
+            """A job that had been deferred by the admission gate finally
+            got in: record how long the pool kept it waiting."""
+            if job.deferred_at is not None:
+                m.admission_wait.observe(time.monotonic() - job.deferred_at)
+                job.deferred_at = None
 
         def retire(slot: _Slot, reason: str, finished: bool) -> None:
             tr = slot.job.traj
@@ -264,12 +340,17 @@ class ContinuousScheduler:
                 tr.meta["logprobs"].extend(slot.turn_lps)
                 tr.meta["policy_versions"].extend(slot.turn_vers)
                 tr.meta["turn_versions"].append(slot.turn_vers[-1])
-                stats["model_tokens"] += len(slot.turn_toks)
+                m.model_tokens.add(len(slot.turn_toks))
             if self._versioned:         # release this trajectory's pins
                 for v in slot.job.versions:
                     self.engine.unpin_version(v)
             tr.stop_reason = reason
             tr.finished = finished
+            if trc.enabled:
+                # the retire span covers the occupant's whole slot residency
+                trc.complete(f"slot{slot.row}", "retire", slot.admit_t,
+                             trc.now(), job=slot.job.index, reason=reason,
+                             finished=finished)
             retired.append(tr)
             slot.future, slot.calls = None, []
             slot.turn_toks, slot.turn_lps, slot.pending_obs = [], [], None
@@ -296,10 +377,15 @@ class ContinuousScheduler:
                 turn_idx=slot.turn_idx,
                 turn_toks=slot.turn_toks, turn_lps=slot.turn_lps,
                 turn_vers=slot.turn_vers, calls=slot.calls,
-                future=live_future, pending_obs=slot.pending_obs)
+                future=live_future, pending_obs=slot.pending_obs,
+                park_t=slot.park_t)
+            rec.job.deferred_at = time.monotonic()
             if rec.future is not None:
                 by_future[rec.future] = rec
             swapped.append(rec)
+            if trc.enabled:
+                trc.instant(f"slot{slot.row}", "swap_out",
+                            job=slot.job.index)
             slot.future, slot.calls = None, []
             slot.turn_toks, slot.turn_lps, slot.turn_vers = [], [], []
             slot.pending_obs = None
@@ -307,8 +393,8 @@ class ContinuousScheduler:
             slot.lane_clean = False
             session.stopped[slot.row] = True
             to_refill.append(slot)
-            stats["preemptions"] += 1
-            stats["swap_out"] += 1
+            m.preemptions.add()
+            m.swap_out.add()
 
         def swap_in(slot: _Slot, rec: _Swapped) -> None:
             """Re-admit a swapped-out record into a freed slot: re-prefill
@@ -321,6 +407,12 @@ class ContinuousScheduler:
             slot.turn_vers = rec.turn_vers
             slot.calls = rec.calls
             slot.lane_clean = False
+            slot.park_t = rec.park_t
+            admit_wait(rec.job)
+            if trc.enabled:
+                slot.admit_t = trc.now()
+                trc.instant(f"slot{slot.row}", "swap_in",
+                            job=rec.job.index)
             max_len = getattr(self.engine, "max_len", None)
             if (rec.pending_obs is not None and max_len is not None
                     and len(rec.context) + len(rec.pending_obs) > max_len):
@@ -329,7 +421,7 @@ class ContinuousScheduler:
                 retire(slot, "max_len", finished=False)
                 return
             self._extend_rows(session, [slot.row], [rec.context])
-            stats["swap_in"] += 1
+            m.swap_in.add()
             if rec.future is not None:
                 slot.future = rec.future
                 by_future[rec.future] = slot
@@ -381,7 +473,7 @@ class ContinuousScheduler:
                 admit_ok = self._can_admit(session, need + backlog, claimed)
                 if not admit_ok:
                     if admitted or any(s.job is not None for s in slots):
-                        stats["admission_deferrals"] += 1
+                        m.admission_deferrals.add()
                         break
                 rec = swapped.popleft()
                 slot = to_refill.pop()
@@ -402,12 +494,19 @@ class ContinuousScheduler:
                 if not admit_ok:
                     if rows or admitted \
                             or any(s.job is not None for s in slots):
-                        stats["admission_deferrals"] += 1
+                        m.admission_deferrals.add()
+                        if queue[0].deferred_at is None:
+                            queue[0].deferred_at = time.monotonic()
                         break
                 slot, job = to_refill.pop(), queue.popleft()
                 slot.job, slot.key, slot.state = job, job.key, SlotState.ACTIVE
                 slot.turn_idx = 0
                 slot.lane_clean = False
+                admit_wait(job)
+                if trc.enabled:
+                    slot.admit_t = trc.now()
+                    trc.complete("queue", "queued", job.enqueued_at,
+                                 slot.admit_t, job=job.index)
                 claimed += need
                 seen.add(tuple(job.prompt_ids))
                 rows.append(slot.row)
@@ -416,15 +515,15 @@ class ContinuousScheduler:
                     break               # force-admitted exactly one
             if rows:
                 self._extend_rows(session, rows, prompts)
-                stats["refills"] += len(rows)
+                m.refills.add(len(rows))
             return admitted + len(rows)
 
         try:
             yield from self._schedule(session, slots, queue, by_future,
-                                      stats, retired, retire, refill,
+                                      m, trc, retired, retire, refill,
                                       preempt)
         finally:
-            # set stats even when the consumer abandons the stream early,
+            # finalize even when the consumer abandons the stream early,
             # and release any still-parked futures from the executor
             if by_future and hasattr(self.executor, "forget"):
                 self.executor.forget(by_future)
@@ -441,43 +540,11 @@ class ContinuousScheduler:
                     for v in rec.job.versions:
                         self.engine.unpin_version(v)
                     rec.job.versions = set()
-            wall = time.monotonic() - t_start
-            self.last_stats = {
-                "wall_s": wall,
-                "rounds": stats["rounds"],
-                "gen_s": stats["gen_s"],
-                "tool_wait_s": stats["tool_wait_s"],
-                "refills": stats["refills"],
-                "model_tokens": stats["model_tokens"],
-                "slot_occupancy": (stats["active_slot_rounds"]
-                                   / max(stats["slot_rounds"], 1.0)),
-                "tool_latency_s": stats["tool_s"],
-                "overlap_factor": stats["tool_s"] / max(wall, 1e-9),
-                "n_slots": float(B),
-                "n_trajectories": float(n_jobs),
-                "min_round_budget": stats["min_round_budget"],
-                "adaptive_rounds": stats["adaptive_rounds"],
-                "admission_deferrals": stats["admission_deferrals"],
-                "starved_rounds": stats["starved_rounds"],
-                "evictions": stats["evictions"],
-                "preemptions": stats["preemptions"],
-                "swap_out": stats["swap_out"],
-                "swap_in": stats["swap_in"],
-                "weight_refreshes": stats["weight_refreshes"],
-            }
-            if stats["util_rounds"]:
-                self.last_stats["cache_utilization"] = (
-                    stats["util_sum"] / stats["util_rounds"])
-                self.last_stats["cache_utilization_peak"] = stats["util_peak"]
-            if hasattr(self.engine, "prefix_stats"):
-                ps = self.engine.prefix_stats(session)
-                if ps is not None:
-                    self.last_stats["prefix_hit_rate"] = ps["prefix_hit_rate"]
-                    self.last_stats["shared_blocks"] = float(
-                        ps["shared_blocks_peak"])
-                    self.last_stats["cow_count"] = float(ps["cow_count"])
-                    self.last_stats["prefix_evictions"] = float(
-                        ps["prefix_evictions"])
+            self.last_stats = self._finalize_stats(
+                m, session, n_slots=B, n_trajectories=n_jobs,
+                wall=time.monotonic() - t_start)
+            trc.export("rollout")
+            _jax_profile_stop()
             # Allocator invariant self-check after the churn of a whole
             # stream (retire/refill/swap/preempt): shared blocks must be
             # neither leaked nor double-freed.  Runs on every scheduler
@@ -486,11 +553,57 @@ class ContinuousScheduler:
             if alloc is not None and hasattr(alloc, "check"):
                 alloc.check()
 
-    def _schedule(self, session, slots, queue, by_future, stats, retired,
+    def _finalize_stats(self, m: _StreamMetrics, session, n_slots: int,
+                        n_trajectories: int, wall: float) -> Dict[str, float]:
+        """The ONE place ``last_stats`` is assembled — every exit path
+        (normal exhaustion, abandoned stream, error teardown) reports the
+        same key set, fed by the stream's metrics registry."""
+        out = {
+            "wall_s": wall,
+            "rounds": m.rounds.value,
+            "gen_s": m.gen_s.value,
+            "tool_wait_s": m.tool_wait.sum,
+            "refills": m.refills.value,
+            "model_tokens": m.model_tokens.value,
+            "slot_occupancy": (m.active_slot_rounds.value
+                               / max(m.slot_rounds.value, 1.0)),
+            "tool_latency_s": m.tool_s.value,
+            "tool_timeouts": m.tool_timeouts.value,
+            "overlap_factor": m.tool_s.value / max(wall, 1e-9),
+            "n_slots": float(n_slots),
+            "n_trajectories": float(n_trajectories),
+            "min_round_budget": m.min_round_budget.value,
+            "adaptive_rounds": m.adaptive_rounds.value,
+            "admission_deferrals": m.admission_deferrals.value,
+            "admission_wait_p90_s": m.admission_wait.percentile(90),
+            "starved_rounds": m.starved_rounds.value,
+            "evictions": m.evictions.value,
+            "preemptions": m.preemptions.value,
+            "swap_out": m.swap_out.value,
+            "swap_in": m.swap_in.value,
+            "weight_refreshes": m.weight_refreshes.value,
+            "decode_round_p50_s": m.decode_round.percentile(50),
+            "decode_round_p99_s": m.decode_round.percentile(99),
+        }
+        if m.cache_util.count:
+            out["cache_utilization"] = m.cache_util.mean
+            out["cache_utilization_peak"] = m.cache_util.max
+        if session is not None and hasattr(self.engine, "prefix_stats"):
+            ps = self.engine.prefix_stats(session)
+            if ps is not None:
+                out["prefix_hit_rate"] = ps["prefix_hit_rate"]
+                out["shared_blocks"] = float(ps["shared_blocks_peak"])
+                out["cow_count"] = float(ps["cow_count"])
+                out["prefix_evictions"] = float(ps["prefix_evictions"])
+        return out
+
+    def _schedule(self, session, slots, queue, by_future, m, trc, retired,
                   retire, refill, preempt) -> Iterator[Trajectory]:
         """The park/retire/refill loop proper (see module docstring)."""
         turn_budget = self.config.max_new_tokens
         no_progress = 0
+        profiling = _jax_profile_start()
+        prof_rounds = 0
         while True:
             for tr in retired:
                 yield tr
@@ -511,7 +624,7 @@ class ContinuousScheduler:
                     else:
                         t0 = time.monotonic()
                         ready = self.executor.wait_ready(futures=by_future)
-                        stats["tool_wait_s"] += time.monotonic() - t0
+                        m.tool_wait.observe(time.monotonic() - t0)
                     for fut in ready:
                         target = by_future.pop(fut, None)
                         if target is None:
@@ -521,11 +634,11 @@ class ContinuousScheduler:
                             # the record; swap-in absorbs it (the max_len
                             # check runs there, where lengths exist again)
                             target.pending_obs = self._obs_ids(
-                                target.calls, fut, stats)
+                                target.calls, fut, m)
                             target.future = None
                             progress = True
                             continue
-                        self._land(session, target, fut, retire, stats)
+                        self._land(session, target, fut, retire, m)
                         progress = True
                 # Absorb landed observations whose rows can get cache blocks;
                 # the rest stay pending (paged backpressure) and retry once a
@@ -550,6 +663,12 @@ class ContinuousScheduler:
                         [self._active_version()] * len(ids))
                     rows.append(slot.row)
                     obs_lists.append(ids)
+                    if trc.enabled:
+                        # park -> revived: the row's tool-I/O shadow
+                        trc.complete(f"slot{slot.row}", "tool_wait",
+                                     slot.park_t, trc.now(),
+                                     job=slot.job.index,
+                                     obs_tokens=len(ids))
                     slot.pending_obs, slot.future, slot.calls = None, None, []
                     slot.state = SlotState.ACTIVE
                     progress = True
@@ -565,7 +684,7 @@ class ContinuousScheduler:
                     if not progress and not by_future:
                         # pool wedged: every slot is waiting for blocks that
                         # nothing left alive can free — swap out the longest
-                        self._preempt(session, slots, retire, preempt, stats)
+                        self._preempt(session, slots, retire, preempt, m)
                     continue
 
             # Round boundary: swap to the latest published weights (if a
@@ -577,11 +696,13 @@ class ContinuousScheduler:
                 prev_ver = int(self.engine.active_version)
                 ver = int(self.engine.refresh_weights())
                 if ver != prev_ver:
-                    stats["weight_refreshes"] += 1
+                    m.weight_refreshes.add()
+                    if trc.enabled:
+                        trc.instant("sched", "weight_refresh", version=ver)
 
-            stats["rounds"] += 1
-            stats["slot_rounds"] += len(slots)
-            stats["active_slot_rounds"] += len(active)
+            m.rounds.add()
+            m.slot_rounds.add(len(slots))
+            m.active_slot_rounds.add(len(active))
             row_keys = self._row_keys(slots)
             n_parked = sum(1 for s in slots if s.state is SlotState.PARKED)
             round_budget = self._round_budget(len(active), n_parked)
@@ -596,21 +717,32 @@ class ContinuousScheduler:
                                                 turn_budget - done))
                 gen_kw = {"step_offsets": offsets, "row_budgets": budgets}
                 if round_budget < turn_budget:
-                    stats["adaptive_rounds"] += 1
-                stats["min_round_budget"] = min(stats["min_round_budget"],
-                                                float(round_budget))
+                    m.adaptive_rounds.add()
+                m.min_round_budget.set_min(float(round_budget))
+            t_round = trc.now() if trc.enabled else 0.0
             t0 = time.monotonic()
             res = self.engine.generate(
                 session, round_budget, None,
                 temperature=self.config.temperature, row_keys=row_keys,
                 **gen_kw)
-            stats["gen_s"] += time.monotonic() - t0
+            dt_round = time.monotonic() - t0
+            m.gen_s.add(dt_round)
+            m.decode_round.observe(dt_round)
+            if trc.enabled:
+                t1_round = trc.now()
+                for s in active:
+                    trc.complete(f"slot{s.row}", "decode_round",
+                                 t_round, t1_round, turn=s.turn_idx,
+                                 job=s.job.index)
+            if profiling:
+                prof_rounds += 1
+                if prof_rounds >= _JAX_PROFILE_ROUNDS:
+                    _jax_profile_stop()
+                    profiling = False
             if hasattr(self.engine, "cache_utilization"):
                 util = self.engine.cache_utilization(session)
                 if util is not None:
-                    stats["util_sum"] += util
-                    stats["util_rounds"] += 1
-                    stats["util_peak"] = max(stats["util_peak"], util)
+                    m.cache_util.observe(util)
 
             stop_set = set(getattr(self.engine, "stop_ids", ()) or ())
             for slot in active:
@@ -622,7 +754,7 @@ class ContinuousScheduler:
                     else:
                         # paged pool starvation: no blocks for this round —
                         # stay ACTIVE and retry once a retirement frees some
-                        stats["starved_rounds"] += 1
+                        m.starved_rounds.add()
                     continue
                 if n_tok:
                     slot.turn_toks.extend(res.tokens[slot.row, :n_tok]
@@ -651,7 +783,7 @@ class ContinuousScheduler:
                 tr.meta["logprobs"].extend(slot.turn_lps)
                 tr.meta["policy_versions"].extend(slot.turn_vers)
                 tr.meta["turn_versions"].append(slot.turn_vers[-1])
-                stats["model_tokens"] += len(row_toks)
+                m.model_tokens.add(len(row_toks))
                 slot.turn_toks, slot.turn_lps = [], []
                 slot.turn_vers = []
                 slot.turn_idx += 1
@@ -674,6 +806,8 @@ class ContinuousScheduler:
                 slot.future = self.executor.submit(calls)
                 by_future[slot.future] = slot
                 slot.state = SlotState.PARKED
+                if trc.enabled:
+                    slot.park_t = trc.now()
                 session.stopped[slot.row] = True
 
             # Wedge breaker: rounds that move no token, land no future and
@@ -685,7 +819,7 @@ class ContinuousScheduler:
             else:
                 no_progress += 1
                 if no_progress >= 2:
-                    self._preempt(session, slots, retire, preempt, stats)
+                    self._preempt(session, slots, retire, preempt, m)
                     no_progress = 0
 
     # ------------------------------------------------------------- internals
@@ -727,7 +861,7 @@ class ContinuousScheduler:
         turns = jnp.asarray([s.turn_idx for s in slots], jnp.int32)
         return _fold_rows(keys, turns)
 
-    def _obs_ids(self, calls, fut, stats) -> List[int]:
+    def _obs_ids(self, calls, fut, m: _StreamMetrics) -> List[int]:
         """Resolve a landed tool future into observation token ids (shared
         by parked slots and swapped-out records)."""
         try:
@@ -736,14 +870,17 @@ class ContinuousScheduler:
             results = [ToolResult(c.name, f"ERROR: {type(e).__name__}: {e}",
                                   ok=False, call_id=c.call_id)
                        for c in calls]
-        stats["tool_s"] += sum(r.latency_s for r in results)
+        m.tool_s.add(sum(r.latency_s for r in results))
+        n_to = sum(1 for r in results if getattr(r, "timeout", False))
+        if n_to:
+            m.tool_timeouts.add(n_to)
         return self.tok.encode(self.env.manager.format_observation(results))
 
-    def _land(self, session, slot: _Slot, fut, retire, stats) -> None:
+    def _land(self, session, slot: _Slot, fut, retire, m) -> None:
         """A parked row's tool results landed: tokenize the observation and
         stage it on the slot (``pending_obs``) for the caller's batched,
         block-gated prefill — or retire the slot if the context is full."""
-        ids = self._obs_ids(slot.calls, fut, stats)
+        ids = self._obs_ids(slot.calls, fut, m)
         max_len = getattr(self.engine, "max_len", None)
         lengths = np.asarray(session.lengths)
         if max_len is not None and int(lengths[slot.row]) + len(ids) > max_len:
@@ -772,7 +909,7 @@ class ContinuousScheduler:
         free = self.engine.free_blocks(session)
         return float("inf") if free is None else free - claimed
 
-    def _preempt(self, session, slots, retire, preempt, stats) -> None:
+    def _preempt(self, session, slots, retire, preempt, m) -> None:
         """Break a block-pool wedge by swapping the longest occupied row out
         to the host (swap-don't-kill): its blocks return to the pool and
         ``refill`` re-admits it later via a context re-prefill, so the
@@ -786,7 +923,7 @@ class ContinuousScheduler:
             return
         victim = max(occupied, key=lambda s: int(lengths[s.row]))
         if len(occupied) == 1:
-            stats["evictions"] += 1
+            m.evictions.add()
             retire(victim, "max_len", finished=False)
             return
         preempt(victim)

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.grpo import (GRPOConfig, grpo_advantages, make_grpo_train_step,
                              token_logprobs)
 from repro.core.mdp import STOP_REASONS, to_training_batch
@@ -102,10 +103,17 @@ class RolloutProducer:
         self.n_emitted = 0
         self.n_pipelined = 0
         streaming = self.streams_scores
+        o = obs.get()
         for tr in self.worker.rollout_stream(tasks, key,
                                              group_size=self.group_size):
             if streaming:
-                self.rewards.score_one(tr, tr.meta["ground_truth"])
+                t_sc = o.tracer.now() if o.tracing else 0.0
+                with o.registry.timer("reward/score_s").time():
+                    self.rewards.score_one(tr, tr.meta["ground_truth"])
+                if o.tracing:
+                    o.tracer.complete("reward", "score", t_sc,
+                                      o.tracer.now(),
+                                      job=tr.meta.get("job_index", -1))
             self.n_emitted += 1
             yield tr
         if streaming:
@@ -180,6 +188,11 @@ class Learner:
         else:
             batch["ref_logprobs"] = jnp.zeros((B, L), jnp.float32)
         self.last_staleness = stal[batch_np["loss_mask"] > 0]
+        if self.last_staleness.size:
+            # process-wide staleness distribution (versions of lag), beyond
+            # the per-iteration p50/p90 scalars in the jsonl log
+            obs.get().registry.histogram(
+                "train/staleness").observe_many(self.last_staleness)
         return batch, batch_np
 
     def update(self, trajs, adv, publish: bool = True):
@@ -190,8 +203,14 @@ class Learner:
         Returns ``(metrics, n_model_tokens)``.
         """
         batch, batch_np = self.make_batch(trajs, adv)
-        self.params, self.opt_state, metrics = self._train_step(
-            self.params, self.opt_state, batch)
+        o = obs.get()
+        t_up = o.tracer.now() if o.tracing else 0.0
+        with o.registry.timer("train/update_s").time():
+            self.params, self.opt_state, metrics = self._train_step(
+                self.params, self.opt_state, batch)
+        if o.tracing:
+            o.tracer.complete("learner", "learner_update", t_up,
+                              o.tracer.now(), n_trajs=len(trajs))
         self.n_updates += 1
         if publish and self.engine is not None:
             if hasattr(self.engine, "publish"):
@@ -430,7 +449,9 @@ class RLTrainer:
                   "adaptive_rounds", "admission_deferrals", "evictions",
                   "preemptions", "swap_out", "swap_in",
                   "weight_refreshes", "prefix_hit_rate", "shared_blocks",
-                  "cow_count", "prefix_evictions"):
+                  "cow_count", "prefix_evictions", "tool_timeouts",
+                  "decode_round_p50_s", "decode_round_p99_s",
+                  "admission_wait_p90_s", "starved_rounds"):
             if k in sched:
                 out[f"rollout/{k}"] = float(sched[k])
         return out

@@ -1,0 +1,406 @@
+"""Typed metrics registry — the observability half that replaces the
+hand-rolled ``stats`` dicts (scheduler, engine, executor, tool registry,
+trainer) with named, typed instruments.
+
+Four instrument kinds:
+
+* :class:`Counter`  — monotone float accumulator (``add``);
+* :class:`Gauge`    — last-value instrument with min/max tracking
+  (``set`` / ``set_min`` / ``set_max``);
+* :class:`Histogram`— fixed-bucket distribution with O(buckets) memory and
+  interpolated percentile snapshots (p50/p90/p99), plus exact
+  count/sum/min/max;
+* :class:`Timer`    — a Histogram pre-configured with latency buckets and a
+  ``time()`` context manager.
+
+A :class:`MetricsRegistry` owns instruments keyed by ``(kind, name, label)``
+— the optional ``label`` gives per-entity families (e.g. tool-call latency
+*per tool name*) without a combinatorial instrument API.  ``snapshot()``
+flattens everything to one ``{str: float}`` dict using the repo's existing
+slash namespaces (``rollout/*``, ``tool/*``, ``train/*``, ...), histograms
+expanding to ``<name>/p50`` etc., labels to ``<name>:<label>``.
+
+Two composition mechanisms keep this both *process-wide* and *per-scope*:
+
+* **parent forwarding** — a child registry created with
+  ``MetricsRegistry(parent=global_reg, parent_prefix="rollout/")`` forwards
+  every recorded value to the same-named (prefixed) instrument of the
+  parent.  The continuous scheduler uses a fresh child per trajectory
+  stream: the child's snapshot is exact per-stream (feeding
+  ``last_stats``), while the process-wide registry accumulates across
+  streams for ``/api/metrics``.
+* **disabled mode** — ``MetricsRegistry(enabled=False)`` hands out shared
+  no-op singletons, so an instrumented call site costs one dict lookup at
+  bind time and a no-op method call per event (measured by
+  benchmarks/bench_obs_overhead.py).
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+# Default latency buckets (seconds): 100us .. 60s, roughly x2.5 per step.
+TIME_BUCKETS = (0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01,
+                0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+# Default value buckets for unit-less histograms (counts, versions, ...).
+VALUE_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0,
+                 512.0, 1024.0)
+PERCENTILES = (50, 90, 99)
+
+
+class Counter:
+    """Monotone accumulator.  Thread-safe (tool results land from the
+    background asyncio loop's thread)."""
+    __slots__ = ("_value", "_lock", "_parent")
+
+    def __init__(self, parent: Optional["Counter"] = None):
+        self._value = 0.0
+        self._lock = threading.Lock()
+        self._parent = parent
+
+    def add(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._value += n
+        if self._parent is not None:
+            self._parent.add(n)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def _flatten(self, key: str, out: Dict[str, float]) -> None:
+        out[key] = self._value
+
+
+class Gauge:
+    """Last-value instrument; ``set_min``/``set_max`` keep running extrema
+    (e.g. the smallest round budget a stream ever used)."""
+    __slots__ = ("_value", "_set", "_lock", "_parent")
+
+    def __init__(self, parent: Optional["Gauge"] = None):
+        self._value = 0.0
+        self._set = False
+        self._lock = threading.Lock()
+        self._parent = parent
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+            self._set = True
+        if self._parent is not None:
+            self._parent.set(v)
+
+    def set_min(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v) if not self._set else min(self._value,
+                                                             float(v))
+            self._set = True
+        if self._parent is not None:
+            self._parent.set_min(v)
+
+    def set_max(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v) if not self._set else max(self._value,
+                                                             float(v))
+            self._set = True
+        if self._parent is not None:
+            self._parent.set_max(v)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def _flatten(self, key: str, out: Dict[str, float]) -> None:
+        out[key] = self._value
+
+
+class Histogram:
+    """Fixed-bucket histogram with interpolated percentile snapshots.
+
+    ``bounds`` are inclusive upper edges; one implicit overflow bucket
+    catches everything past the last edge.  Memory is O(len(bounds)),
+    independent of the number of observations — percentiles are estimated
+    by linear interpolation inside the bucket where the requested rank
+    falls, clamped to the exact observed [min, max].
+    """
+    __slots__ = ("bounds", "_counts", "_n", "_sum", "_min", "_max",
+                 "_lock", "_parent")
+
+    def __init__(self, bounds: Sequence[float] = VALUE_BUCKETS,
+                 parent: Optional["Histogram"] = None):
+        b = tuple(float(x) for x in bounds)
+        assert all(b[i] < b[i + 1] for i in range(len(b) - 1)), \
+            "histogram bounds must be strictly increasing"
+        self.bounds = b
+        self._counts = [0] * (len(b) + 1)
+        self._n = 0
+        self._sum = 0.0
+        self._min = 0.0
+        self._max = 0.0
+        self._lock = threading.Lock()
+        self._parent = parent
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self._counts[bisect.bisect_left(self.bounds, v)] += 1
+            if self._n == 0:
+                self._min = self._max = v
+            else:
+                self._min = min(self._min, v)
+                self._max = max(self._max, v)
+            self._n += 1
+            self._sum += v
+        if self._parent is not None:
+            self._parent.observe(v)
+
+    def observe_many(self, values) -> None:
+        """Bulk observe (e.g. a micro-batch's per-token staleness) in one
+        vectorized pass."""
+        arr = np.asarray(values, np.float64).ravel()
+        if arr.size == 0:
+            return
+        idx = np.searchsorted(np.asarray(self.bounds), arr, side="left")
+        binned = np.bincount(idx, minlength=len(self.bounds) + 1)
+        with self._lock:
+            for i, c in enumerate(binned):
+                self._counts[i] += int(c)
+            vmin, vmax = float(arr.min()), float(arr.max())
+            if self._n == 0:
+                self._min, self._max = vmin, vmax
+            else:
+                self._min = min(self._min, vmin)
+                self._max = max(self._max, vmax)
+            self._n += arr.size
+            self._sum += float(arr.sum())
+        if self._parent is not None:
+            self._parent.observe_many(arr)
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    @property
+    def mean(self) -> float:
+        return self._sum / self._n if self._n else 0.0
+
+    @property
+    def min(self) -> float:
+        return self._min
+
+    @property
+    def max(self) -> float:
+        return self._max
+
+    def percentile(self, q: float) -> float:
+        """Estimated q-th percentile (0..100) by intra-bucket linear
+        interpolation; exact when a bucket holds a single distinct value
+        width-0 wide (clamped to observed extrema)."""
+        with self._lock:
+            n = self._n
+            if n == 0:
+                return 0.0
+            target = (q / 100.0) * n
+            cum = 0
+            for i, c in enumerate(self._counts):
+                if c == 0:
+                    continue
+                if cum + c >= target:
+                    lo = self._min if i == 0 else self.bounds[i - 1]
+                    hi = self._max if i >= len(self.bounds) else self.bounds[i]
+                    frac = (target - cum) / c
+                    v = lo + frac * (hi - lo)
+                    return float(min(max(v, self._min), self._max))
+                cum += c
+            return self._max
+
+    def _flatten(self, key: str, out: Dict[str, float]) -> None:
+        out[f"{key}/count"] = float(self._n)
+        out[f"{key}/sum"] = self._sum
+        out[f"{key}/mean"] = self.mean
+        out[f"{key}/max"] = self._max
+        for p in PERCENTILES:
+            out[f"{key}/p{p}"] = self.percentile(p)
+
+
+class _TimerCM:
+    __slots__ = ("_timer", "_t0")
+
+    def __init__(self, timer: "Timer"):
+        self._timer = timer
+
+    def __enter__(self):
+        self._t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc):
+        self._timer.observe(time.monotonic() - self._t0)
+        return False
+
+
+class Timer(Histogram):
+    """Histogram of durations (seconds) with a ``with timer.time():``
+    convenience scope."""
+    __slots__ = ()
+
+    def __init__(self, bounds: Sequence[float] = TIME_BUCKETS, parent=None):
+        super().__init__(bounds, parent=parent)
+
+    def time(self) -> _TimerCM:
+        return _TimerCM(self)
+
+
+# --------------------------------------------------------------- null ops
+class _NullCM:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CM = _NullCM()
+
+
+class NullCounter:
+    __slots__ = ()
+    value = 0.0
+
+    def add(self, n: float = 1.0) -> None:
+        pass
+
+    def _flatten(self, key, out) -> None:
+        pass
+
+
+class NullGauge:
+    __slots__ = ()
+    value = 0.0
+
+    def set(self, v) -> None:
+        pass
+
+    set_min = set_max = set
+
+    def _flatten(self, key, out) -> None:
+        pass
+
+
+class NullHistogram:
+    __slots__ = ()
+    count, sum, mean, min, max = 0, 0.0, 0.0, 0.0, 0.0
+    bounds = ()
+
+    def observe(self, v) -> None:
+        pass
+
+    def observe_many(self, values) -> None:
+        pass
+
+    def percentile(self, q) -> float:
+        return 0.0
+
+    def time(self) -> _NullCM:
+        return _NULL_CM
+
+    def _flatten(self, key, out) -> None:
+        pass
+
+
+NULL_COUNTER = NullCounter()
+NULL_GAUGE = NullGauge()
+NULL_HISTOGRAM = NullHistogram()     # doubles as the null Timer
+
+
+# --------------------------------------------------------------- registry
+class MetricsRegistry:
+    """Process- or scope-wide home of named instruments.
+
+    ``counter/gauge/timer/histogram`` create on first use and return the
+    same instrument thereafter (per ``(name, label)``).  With ``parent``
+    set, every instrument forwards its recordings to the parent's
+    same-named instrument under ``parent_prefix`` — exact local stats plus
+    cumulative global ones for the price of one extra no-alloc call.
+    Disabled registries hand out the shared no-op singletons.
+    """
+
+    def __init__(self, enabled: bool = True,
+                 parent: Optional["MetricsRegistry"] = None,
+                 parent_prefix: str = ""):
+        self.enabled = bool(enabled)
+        self.parent = parent
+        self.parent_prefix = parent_prefix
+        self._instruments: Dict[Tuple[str, str, Optional[str]], object] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ factories
+    def counter(self, name: str, label: Optional[str] = None) -> Counter:
+        return self._get("counter", Counter, name, label)
+
+    def gauge(self, name: str, label: Optional[str] = None) -> Gauge:
+        return self._get("gauge", Gauge, name, label)
+
+    def timer(self, name: str, label: Optional[str] = None) -> Timer:
+        return self._get("timer", Timer, name, label)
+
+    def histogram(self, name: str, label: Optional[str] = None,
+                  bounds: Sequence[float] = VALUE_BUCKETS) -> Histogram:
+        return self._get("histogram", Histogram, name, label, bounds=bounds)
+
+    def _get(self, kind: str, cls, name: str, label: Optional[str],
+             **kw):
+        if not self.enabled:
+            return {"counter": NULL_COUNTER, "gauge": NULL_GAUGE,
+                    "timer": NULL_HISTOGRAM,
+                    "histogram": NULL_HISTOGRAM}[kind]
+        key = (kind, name, label)
+        inst = self._instruments.get(key)
+        if inst is not None:
+            return inst
+        with self._lock:
+            inst = self._instruments.get(key)
+            if inst is not None:
+                return inst
+            parent_inst = None
+            if self.parent is not None and self.parent.enabled:
+                parent_inst = self.parent._get(
+                    kind, cls, self.parent_prefix + name, label, **kw)
+            if kw:
+                inst = cls(parent=parent_inst, **kw)
+            else:
+                inst = cls(parent=parent_inst)
+            self._instruments[key] = inst
+            return inst
+
+    # ------------------------------------------------------------ snapshot
+    def snapshot(self) -> Dict[str, float]:
+        """Flatten every instrument to ``{key: float}``.  Key layout:
+        ``name`` (counter/gauge), ``name/p50`` etc. (histogram/timer),
+        ``name:label`` for labeled families — preserving the repo's
+        slash-namespaced metric names (``rollout/*``, ``tool/*``, ...)."""
+        out: Dict[str, float] = {}
+        with self._lock:
+            items = list(self._instruments.items())
+        for (kind, name, label), inst in sorted(items,
+                                                key=lambda kv: kv[0][1:]):
+            key = name if label is None else f"{name}:{label}"
+            inst._flatten(key, out)
+        return out
+
+    def reset(self) -> None:
+        """Drop every instrument (fresh-scope semantics for tests)."""
+        with self._lock:
+            self._instruments.clear()
+
+
+NULL_REGISTRY = MetricsRegistry(enabled=False)

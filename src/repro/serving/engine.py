@@ -92,6 +92,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import Model, PagedCache
 from repro.serving.prefix_index import RadixPrefixIndex
 
@@ -872,6 +873,12 @@ class GenerationEngine:
                 session.lengths[i] += n_hit
                 a.shared_tokens += n_hit
                 work[i] = list(t[n_hit:])
+                o = obs.get()
+                o.registry.counter("engine/radix_hits").add()
+                o.registry.counter("engine/radix_hit_tokens").add(n_hit)
+                if o.tracing:
+                    o.tracer.instant("cache", "radix_hit", row=i,
+                                     tokens=n_hit, blocks=len(hit))
             registrations.append((i, list(t)))
         return work, (followers, registrations)
 
@@ -931,6 +938,10 @@ class GenerationEngine:
         if src:
             session.cache = self.model.copy_cache_blocks(
                 session.cache, src, dst, policy=session.cache_policy)
+            o = obs.get()
+            o.registry.counter("engine/cow_copies").add(len(src))
+            if o.tracing:
+                o.tracer.instant("cache", "cow", row=row, blocks=len(src))
         return ok
 
     def _extend_once(self, session: DecodeSession,
@@ -940,6 +951,18 @@ class GenerationEngine:
         lens = np.array([len(t) for t in new_tokens], np.int64)
         if lens.max(initial=0) == 0:
             return
+        o = obs.get()
+        t_pre = o.tracer.now() if o.tracing else 0.0
+        with o.registry.timer("engine/prefill_s").time():
+            self._extend_inner(session, new_tokens, lens)
+        if o.tracing:
+            o.tracer.complete("engine", "prefill", t_pre, o.tracer.now(),
+                              tokens=int(lens.sum()),
+                              rows=int((lens > 0).sum()))
+
+    def _extend_inner(self, session: DecodeSession,
+                      new_tokens: List[List[int]], lens) -> None:
+        B = session.batch
         if session.allocator is not None:
             # prefill needs full coverage: map blocks for every new token
             # before any position is written (no partial prefills)

@@ -19,6 +19,8 @@ import json
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class ToolSpec:
@@ -56,6 +58,7 @@ class ToolResult:
     ok: bool = True
     latency_s: float = 0.0
     call_id: int = 0
+    timeout: bool = False            # distinct from other failures
 
 
 class ToolRegistry:
@@ -122,13 +125,39 @@ class ToolRegistry:
                 content = await asyncio.wait_for(
                     loop.run_in_executor(None, lambda: spec.fn(**args)),
                     spec.timeout_s)
-            return ToolResult(call.name, str(content), ok=True,
-                              latency_s=time.monotonic() - t0,
-                              call_id=call.call_id)
+            res = ToolResult(call.name, str(content), ok=True,
+                             latency_s=time.monotonic() - t0,
+                             call_id=call.call_id)
+        except (asyncio.TimeoutError, TimeoutError):
+            res = ToolResult(call.name,
+                             f"ERROR: TimeoutError: tool {call.name!r} timed "
+                             f"out after {self._timeout_of(call.name)}s",
+                             ok=False, latency_s=time.monotonic() - t0,
+                             call_id=call.call_id, timeout=True)
         except Exception as e:  # tool errors are observations, not crashes
-            return ToolResult(call.name, f"ERROR: {type(e).__name__}: {e}",
-                              ok=False, latency_s=time.monotonic() - t0,
-                              call_id=call.call_id)
+            res = ToolResult(call.name, f"ERROR: {type(e).__name__}: {e}",
+                             ok=False, latency_s=time.monotonic() - t0,
+                             call_id=call.call_id)
+        self._record(res)
+        return res
+
+    def _timeout_of(self, name: str) -> float:
+        try:
+            return self.get(name).timeout_s
+        except KeyError:
+            return 0.0
+
+    @staticmethod
+    def _record(res: ToolResult) -> None:
+        """Per-tool metrics for every call outcome (thread-safe; runs on
+        the background loop's thread)."""
+        reg = obs.get().registry
+        reg.counter("tool/calls", label=res.name).add()
+        reg.timer("tool/latency_s", label=res.name).observe(res.latency_s)
+        if res.timeout:
+            reg.counter("tool/timeouts", label=res.name).add()
+        elif not res.ok:
+            reg.counter("tool/errors", label=res.name).add()
 
     def call_sync(self, call: ToolCall) -> ToolResult:
         """Blocking single-call execution with ``spec.timeout_s`` enforced.

@@ -5,8 +5,17 @@ Serves:
   /            training dashboard: reward/loss curves from
                results/train/*.jsonl (auto-refresh)
   /dryrun      dry-run artifact table from results/dryrun/*.json
+  /trace       span-timeline viewer for results/trace/*.trace.json
   /api/runs    raw JSON for the curves
   /api/dryrun  raw JSON for the artifact table
+  /api/metrics flattened process metrics-registry snapshot
+  /api/trace   latest exported Chrome trace (plus the file list)
+
+Training logs are tailed incrementally: each file's (mtime, size, offset)
+is cached and only appended lines are parsed on refresh, so the 10s
+auto-refresh stays O(new lines) instead of re-reading every run from
+scratch.  Corrupt jsonl lines are *counted* (and shown on the dashboard)
+rather than silently swallowed.
 
     PYTHONPATH=src python -m repro.webui.server [--port 8080]
 """
@@ -16,7 +25,10 @@ import argparse
 import glob
 import json
 import os
+import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro import obs
 
 RESULTS = os.path.join(os.getcwd(), "results")
 
@@ -27,26 +39,73 @@ PAGE = """<!doctype html><html><head><title>RLFactory-JAX</title>
  table {{ border-collapse: collapse; }}
  td, th {{ border: 1px solid #444; padding: 4px 8px; font-size: 13px; }}
  .bar {{ background: #2a6; height: 12px; display: inline-block; }}
+ .warn {{ color: #fa5; }}
 </style></head>
 <body><h1>RLFactory-JAX {title}</h1>
-<p><a href="/">training</a> | <a href="/dryrun">dry-run</a></p>
+<p><a href="/">training</a> | <a href="/dryrun">dry-run</a> | \
+<a href="/trace">trace</a> | <a href="/api/metrics">metrics</a></p>
 {body}
-<script>setTimeout(() => location.reload(), 10000);</script>
+{tail}
 </body></html>"""
+
+_RELOAD = "<script>setTimeout(() => location.reload(), 10000);</script>"
+
+
+class _TailCache:
+    """Per-file incremental jsonl tail: parse only bytes appended since the
+    last poll; a shrunk or rewritten file (mtime moved back, size below our
+    offset) resets its entry."""
+
+    def __init__(self):
+        self._files = {}          # path -> {mtime, offset, rows, corrupt}
+        self._lock = threading.Lock()
+
+    def read(self, path: str):
+        st = os.stat(path)
+        with self._lock:
+            ent = self._files.get(path)
+            if ent is None or st.st_size < ent["offset"]:
+                ent = {"mtime": -1.0, "offset": 0, "rows": [], "corrupt": 0}
+                self._files[path] = ent
+            if st.st_mtime == ent["mtime"] and st.st_size == ent["offset"]:
+                return ent["rows"], ent["corrupt"]
+            with open(path, "rb") as f:
+                f.seek(ent["offset"])
+                chunk = f.read()
+            # only consume complete lines; a partially-written trailing line
+            # stays unparsed (and uncounted) until its newline arrives
+            end = chunk.rfind(b"\n")
+            if end >= 0:
+                for line in chunk[:end].split(b"\n"):
+                    if not line.strip():
+                        continue
+                    try:
+                        ent["rows"].append(json.loads(line))
+                    except json.JSONDecodeError:
+                        ent["corrupt"] += 1
+                ent["offset"] += end + 1
+            ent["mtime"] = st.st_mtime
+            return ent["rows"], ent["corrupt"]
+
+
+_tail = _TailCache()
 
 
 def load_runs():
     runs = {}
     for path in sorted(glob.glob(os.path.join(RESULTS, "train", "*.jsonl"))):
-        rows = []
-        with open(path) as f:
-            for line in f:
-                try:
-                    rows.append(json.loads(line))
-                except json.JSONDecodeError:
-                    pass
+        rows, _ = _tail.read(path)
         runs[os.path.basename(path)] = rows
     return runs
+
+
+def corrupt_counts():
+    """Per-run corrupt-jsonl-line counts accumulated by the tail cache."""
+    out = {}
+    for path in sorted(glob.glob(os.path.join(RESULTS, "train", "*.jsonl"))):
+        _, n = _tail.read(path)
+        out[os.path.basename(path)] = n
+    return out
 
 
 def load_dryrun():
@@ -58,6 +117,21 @@ def load_dryrun():
         except json.JSONDecodeError:
             pass
     return out
+
+
+def load_trace():
+    """Latest exported trace (or None) plus the full file list."""
+    files = sorted(glob.glob(os.path.join(RESULTS, "trace", "*.trace.json")))
+    latest = None
+    if files:
+        try:
+            with open(files[-1]) as f:
+                latest = json.load(f)
+        except json.JSONDecodeError:
+            latest = None
+    return {"files": [os.path.basename(p) for p in files],
+            "latest": latest,
+            "latest_file": os.path.basename(files[-1]) if files else None}
 
 
 def _ascii_curve(vals, width=60, height=8):
@@ -75,19 +149,26 @@ def _ascii_curve(vals, width=60, height=8):
 
 def training_page():
     parts = []
+    corrupt = corrupt_counts()
     for name, rows in load_runs().items():
         if not rows:
             continue
         rewards = [r.get("reward_mean", 0.0) for r in rows]
         last = rows[-1]
-        parts.append(f"<h3>{name}</h3><pre>{_ascii_curve(rewards)}</pre>")
+        bad = corrupt.get(name, 0)
+        badge = (f" <span class='warn'>({bad} corrupt lines)</span>"
+                 if bad else "")
+        parts.append(f"<h3>{name}{badge}</h3>"
+                     f"<pre>{_ascii_curve(rewards)}</pre>")
         keys = ("step", "reward_mean", "exact_match", "finished_frac",
                 "tool_calls_mean", "loss", "rollout_s", "train_s")
         parts.append("<table><tr>" + "".join(f"<th>{k}</th>" for k in keys)
                      + "</tr><tr>"
                      + "".join(f"<td>{round(last.get(k, 0), 4)}</td>"
                                for k in keys) + "</tr></table>")
-    return PAGE.format(title="training", body="".join(parts) or "<p>no runs</p>")
+    return PAGE.format(title="training",
+                       body="".join(parts) or "<p>no runs</p>",
+                       tail=_RELOAD)
 
 
 def dryrun_page():
@@ -108,7 +189,65 @@ def dryrun_page():
             f"<td style='background:{color}'>{d['status']}</td>"
             f"<td>{hbm:.1f} GB</td><td>{dom}</td><td>{t:.4g} s</td></tr>")
     cells.append("</table>")
-    return PAGE.format(title="dry-run", body="".join(cells))
+    return PAGE.format(title="dry-run", body="".join(cells), tail=_RELOAD)
+
+
+# Client-side timeline: fetch /api/trace, lay each track (tid) out as a row
+# and every complete span as an absolutely-positioned bar.  Kept dependency-
+# free; load the raw file in Perfetto for the full-fidelity view.
+_TRACE_JS = """
+<div id="tl">loading…</div>
+<script>
+fetch('/api/trace').then(r => r.json()).then(d => {
+  const el = document.getElementById('tl');
+  if (!d.latest) { el.textContent = 'no trace exported yet ' +
+    '(set REPRO_TRACE_DIR=results/trace)'; return; }
+  const evs = d.latest.traceEvents;
+  const names = {};
+  evs.filter(e => e.ph === 'M').forEach(e => names[e.tid] = e.args.name);
+  const spans = evs.filter(e => e.ph === 'X');
+  const insts = evs.filter(e => e.ph === 'i');
+  const t0 = Math.min(...spans.map(e => e.ts));
+  const t1 = Math.max(...spans.map(e => e.ts + e.dur));
+  const W = 900, scale = W / Math.max(t1 - t0, 1);
+  const colors = {prefill:'#27c', decode_round:'#2a6', tool_wait:'#a62',
+                  retire:'#666', queued:'#444', score:'#b4a',
+                  learner_update:'#c55'};
+  const tids = [...new Set(spans.concat(insts).map(e => e.tid))].sort(
+    (a, b) => a - b);
+  let html = '<p>' + d.latest_file + ' — ' + spans.length + ' spans, ' +
+    insts.length + ' instants, ' + ((t1 - t0) / 1000).toFixed(1) +
+    ' ms</p>';
+  for (const tid of tids) {
+    html += '<div style="margin:2px 0"><span style="display:inline-block;' +
+      'width:90px">' + (names[tid] || 'tid' + tid) + '</span>' +
+      '<span style="position:relative;display:inline-block;width:' + W +
+      'px;height:14px;background:#1a1a1a">';
+    for (const e of spans.filter(e => e.tid === tid)) {
+      const x = (e.ts - t0) * scale, w = Math.max(e.dur * scale, 1);
+      html += '<span title="' + e.name + ' ' + (e.dur / 1000).toFixed(2) +
+        'ms" style="position:absolute;left:' + x + 'px;width:' + w +
+        'px;height:12px;top:1px;background:' +
+        (colors[e.name] || '#579') + '"></span>';
+    }
+    for (const e of insts.filter(e => e.tid === tid)) {
+      const x = (e.ts - t0) * scale;
+      html += '<span title="' + e.name + '" style="position:absolute;left:' +
+        x + 'px;width:2px;height:14px;top:0;background:#ff5"></span>';
+    }
+    html += '</span></div>';
+  }
+  html += '<p>' + Object.entries(colors).map(([k, v]) =>
+    '<span style="background:' + v + '">&nbsp;&nbsp;</span> ' + k
+  ).join(' &nbsp; ') + '</p>';
+  el.innerHTML = html;
+});
+</script>
+"""
+
+
+def trace_page():
+    return PAGE.format(title="trace timeline", body=_TRACE_JS, tail="")
 
 
 class Handler(BaseHTTPRequestHandler):
@@ -125,8 +264,15 @@ class Handler(BaseHTTPRequestHandler):
             self._send(json.dumps(load_runs()), "application/json")
         elif self.path.startswith("/api/dryrun"):
             self._send(json.dumps(load_dryrun()), "application/json")
+        elif self.path.startswith("/api/metrics"):
+            self._send(json.dumps(obs.get().registry.snapshot()),
+                       "application/json")
+        elif self.path.startswith("/api/trace"):
+            self._send(json.dumps(load_trace()), "application/json")
         elif self.path.startswith("/dryrun"):
             self._send(dryrun_page())
+        elif self.path.startswith("/trace"):
+            self._send(trace_page())
         else:
             self._send(training_page())
 

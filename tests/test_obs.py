@@ -1,0 +1,473 @@
+"""Observability layer: metrics registry, span tracer / Chrome trace schema,
+tool-timeout accounting, obs-on/off token parity, webui surfaces."""
+import asyncio
+import json
+import threading
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+
+
+# ------------------------------------------------------------- registry
+def test_counter_gauge_basics():
+    r = obs.MetricsRegistry()
+    c = r.counter("rollout/rounds")
+    c.add()
+    c.add(2.5)
+    assert c.value == 3.5
+    assert r.counter("rollout/rounds") is c      # same instrument per name
+    g = r.gauge("rollout/min_round_budget")
+    g.set(64)
+    g.set_min(8)
+    g.set_min(100)          # min keeps 8
+    assert g.value == 8.0
+    g2 = r.gauge("peak")
+    g2.set_max(1)
+    g2.set_max(5)
+    g2.set_max(3)
+    assert g2.value == 5.0
+
+
+def test_histogram_percentiles_and_exact_stats():
+    r = obs.MetricsRegistry()
+    h = r.histogram("lat", bounds=(1, 2, 4, 8, 16))
+    vals = [0.5, 1.5, 3, 3, 5, 7, 12, 40]
+    for v in vals:
+        h.observe(v)
+    assert h.count == len(vals)
+    assert h.sum == pytest.approx(sum(vals))
+    assert h.mean == pytest.approx(np.mean(vals))
+    assert h.min == 0.5 and h.max == 40
+    # percentile estimates are interpolated within buckets but must bracket
+    # the true order statistics to within one bucket width
+    assert 1.0 <= h.percentile(50) <= 8.0
+    assert h.percentile(99) <= 40.0
+    assert h.percentile(0) == pytest.approx(0.5)   # clamped to observed min
+    assert h.percentile(100) == pytest.approx(40)  # ... and max
+
+
+def test_histogram_observe_many_matches_loop():
+    r = obs.MetricsRegistry()
+    a = r.histogram("a", bounds=(1, 2, 4))
+    b = r.histogram("b", bounds=(1, 2, 4))
+    vals = [0.5, 1.0, 1.5, 2.0, 3.0, 9.0]
+    for v in vals:
+        a.observe(v)
+    b.observe_many(vals)
+    assert a._counts == b._counts
+    assert a.count == b.count and a.sum == pytest.approx(b.sum)
+    assert a.min == b.min and a.max == b.max
+
+
+def test_timer_context_manager():
+    r = obs.MetricsRegistry()
+    t = r.timer("step")
+    with t.time():
+        pass
+    assert t.count == 1 and t.sum >= 0.0
+
+
+def test_snapshot_flattening_keys():
+    r = obs.MetricsRegistry()
+    r.counter("rollout/rounds").add(3)
+    r.gauge("rollout/n_slots").set(4)
+    r.timer("tool/latency_s", label="search").observe(0.1)
+    snap = r.snapshot()
+    assert snap["rollout/rounds"] == 3.0
+    assert snap["rollout/n_slots"] == 4.0
+    for suffix in ("count", "sum", "mean", "max", "p50", "p90", "p99"):
+        assert f"tool/latency_s:search/{suffix}" in snap
+
+
+def test_disabled_registry_is_noop_singletons():
+    r = obs.MetricsRegistry(enabled=False)
+    c = r.counter("x")
+    c.add(100)
+    assert c.value == 0.0
+    assert r.counter("y") is c                   # shared null singleton
+    t = r.timer("t")
+    with t.time():
+        pass
+    t.observe(1.0)
+    r.histogram("h").observe_many([1, 2, 3])
+    assert r.snapshot() == {}
+
+
+def test_parent_forwarding_child_registry():
+    parent = obs.MetricsRegistry()
+    child = obs.MetricsRegistry(parent=parent, parent_prefix="rollout/")
+    child.counter("refills").add(5)
+    child.timer("decode_round_s").observe(0.25)
+    # exact per-scope values AND cumulative parent values
+    assert child.snapshot()["refills"] == 5.0
+    psnap = parent.snapshot()
+    assert psnap["rollout/refills"] == 5.0
+    assert psnap["rollout/decode_round_s/count"] == 1.0
+    # a second stream's child accumulates into the same parent instruments
+    child2 = obs.MetricsRegistry(parent=parent, parent_prefix="rollout/")
+    child2.counter("refills").add(2)
+    assert parent.snapshot()["rollout/refills"] == 7.0
+    assert child2.snapshot()["refills"] == 2.0
+
+
+# ---------------------------------------------------------------- tracer
+def test_tracer_export_valid_chrome_trace(tmp_path):
+    tr = obs.SpanTracer(out_dir=str(tmp_path))
+    t0 = tr.now()
+    tr.complete("slot0", "decode_round", t0, tr.now(), turn=0)
+    tr.complete("slot1", "tool_wait", t0, t0 + 0.010, job=3)
+    tr.instant("sched", "weight_refresh", version=2)
+    path = tr.export("test")
+    obj = json.load(open(path))
+    assert obs.validate_chrome_trace(obj) == []
+    evs = obj["traceEvents"]
+    # metadata names every referenced track
+    named = {e["tid"] for e in evs if e["ph"] == "M"}
+    used = {e["tid"] for e in evs if e["ph"] in ("X", "i")}
+    assert used <= named
+    # span times are non-negative microseconds
+    for e in evs:
+        if e["ph"] == "X":
+            assert e["ts"] >= 0 and e["dur"] >= 0
+    # export cleared the ring buffer
+    assert tr.export("again") == ""
+
+
+def test_tracer_clamps_negative_durations(tmp_path):
+    tr = obs.SpanTracer(out_dir=str(tmp_path))
+    tr.complete("a", "backwards", 5.0, 1.0)      # t1 < t0
+    obj = json.load(open(tr.export("clamp")))
+    assert obs.validate_chrome_trace(obj) == []
+    (span,) = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+    assert span["dur"] == 0.0
+
+
+def test_validator_rejects_malformed_traces():
+    assert obs.validate_chrome_trace([]) != []
+    assert obs.validate_chrome_trace({"no": 1}) != []
+    bad_phase = {"traceEvents": [{"ph": "Z", "name": "x", "ts": 0, "tid": 0}]}
+    assert any("phase" in e for e in obs.validate_chrome_trace(bad_phase))
+    neg_ts = {"traceEvents": [
+        {"ph": "M", "name": "thread_name", "tid": 0, "ts": 0,
+         "args": {"name": "t"}},
+        {"ph": "X", "name": "s", "ts": -1, "dur": 1, "tid": 0}]}
+    assert any("ts" in e for e in obs.validate_chrome_trace(neg_ts))
+    orphan_tid = {"traceEvents": [
+        {"ph": "X", "name": "s", "ts": 0, "dur": 1, "tid": 7}]}
+    assert any("thread_name" in e
+               for e in obs.validate_chrome_trace(orphan_tid))
+
+
+def test_null_tracer_is_inert():
+    tr = obs.NULL_TRACER
+    assert not tr.enabled
+    tr.complete("a", "b", 0, 1)
+    tr.instant("a", "c")
+    assert tr.now() == 0.0 and tr.export() == "" and tr.events() == []
+
+
+def test_configure_and_scoped(tmp_path):
+    base = obs.get()
+    with obs.scoped(trace=True, trace_dir=str(tmp_path)) as o:
+        assert obs.get() is o and o.tracing
+        o.tracer.complete("t", "s", 0.0, 0.001)
+        assert o.tracer.export("scoped") != ""
+    assert obs.get() is base          # scoped() restores the previous bundle
+
+
+# --------------------------------------------------------- tool timeouts
+def _timeout_registry():
+    from repro.tools.registry import ToolRegistry, ToolSpec
+
+    reg = ToolRegistry()
+
+    async def slow_async():
+        await asyncio.sleep(5.0)
+        return "never"
+
+    def slow_sync():
+        import time
+        time.sleep(5.0)
+        return "never"
+
+    def crash():
+        raise ValueError("boom")
+
+    reg.register(ToolSpec(name="slow_async", fn=slow_async, timeout_s=0.05))
+    reg.register(ToolSpec(name="slow_sync", fn=slow_sync, timeout_s=0.05))
+    reg.register(ToolSpec(name="crash", fn=crash))
+    return reg
+
+
+def test_async_tool_timeout_lands_in_counter():
+    from repro.tools.registry import ToolCall
+    reg = _timeout_registry()
+    with obs.scoped() as o:
+        res = asyncio.run(reg.call_async(ToolCall("slow_async", {})))
+        assert not res.ok and res.timeout
+        assert "TimeoutError" in res.content
+        snap = o.registry.snapshot()
+        assert snap["tool/timeouts:slow_async"] == 1.0
+        assert "tool/errors:slow_async" not in snap    # distinct from errors
+
+
+def test_sync_tool_timeout_lands_in_counter():
+    from repro.tools.registry import ToolCall
+    reg = _timeout_registry()
+    with obs.scoped() as o:
+        res = reg.call_sync(ToolCall("slow_sync", {}))
+        assert not res.ok and res.timeout
+        snap = o.registry.snapshot()
+        assert snap["tool/timeouts:slow_sync"] == 1.0
+
+
+def test_tool_error_is_not_a_timeout():
+    from repro.tools.registry import ToolCall
+    reg = _timeout_registry()
+    with obs.scoped() as o:
+        res = reg.call_sync(ToolCall("crash", {}))
+        assert not res.ok and not res.timeout
+        snap = o.registry.snapshot()
+        assert snap["tool/errors:crash"] == 1.0
+        assert "tool/timeouts:crash" not in snap
+
+
+def test_scheduler_surfaces_tool_timeouts_in_last_stats():
+    """A trajectory whose tool call times out must show up in the rollout
+    stats (``last_stats['tool_timeouts']``), not just as a failed result."""
+    import re as _re
+    from repro.core.rollout import RolloutConfig, RolloutWorker
+    from repro.data.tokenizer import default_tokenizer
+    from repro.serving.engine import DecodeSession, GenerationResult
+    from repro.tools.envs import Env as BaseEnv
+    from repro.tools.manager import Qwen3ToolManager
+    from repro.tools.registry import ToolRegistry, ToolSpec
+
+    tok = default_tokenizer()
+    reg = ToolRegistry()
+
+    async def hang(ms):
+        await asyncio.sleep(5.0)
+        return "never"
+
+    reg.register(ToolSpec(name="hang", fn=hang, timeout_s=0.05,
+                          parameters={"ms": {"required": True}}))
+    env = BaseEnv(reg, Qwen3ToolManager(reg, compact=True), max_tool_calls=8)
+
+    scripts = {0: ["<tool_call>hang: 1</tool_call>", "<answer>t0</answer>"],
+               1: ["<answer>t1</answer>"]}
+    task_re = _re.compile(r"task-(\d+)")
+
+    class Eng:
+        stop_ids = ()
+
+        def __init__(self):
+            self.task, self.turn = [], []
+            self.fresh = set()
+
+        def _tid(self, toks):
+            return int(task_re.search(tok.decode(list(toks))).group(1))
+
+        def start(self, contexts):
+            self.task = [self._tid(c) for c in contexts]
+            self.turn = [0] * len(contexts)
+            return DecodeSession(
+                cache=None,
+                lengths=np.array([len(c) for c in contexts]),
+                last_logits=None,
+                stopped=np.zeros(len(contexts), bool))
+
+        def generate(self, session, n, key=None, temperature=None,
+                     row_keys=None):
+            toks = []
+            for i in range(session.batch):
+                if session.stopped[i]:
+                    toks.append([])
+                    continue
+                s = scripts[self.task[i]]
+                toks.append(tok.encode(s[min(self.turn[i], len(s) - 1)]))
+                self.turn[i] += 1
+            lps = [np.full(len(t), -1.0, np.float32) for t in toks]
+            return GenerationResult.from_lists(toks, lps, pad_id=tok.pad_id)
+
+        def extend(self, session, lists):
+            pass
+
+        def extend_rows(self, session, rows, lists):
+            for r, t in zip(rows, lists):
+                r = int(r)
+                session.stopped[r] = False
+                if r in self.fresh:
+                    self.task[r] = self._tid(t)
+                    self.turn[r] = 0
+                    self.fresh.discard(r)
+
+        def reset_rows(self, session, rows):
+            for r in rows:
+                session.stopped[int(r)] = True
+                self.fresh.add(int(r))
+
+    with obs.scoped() as o:
+        worker = RolloutWorker(
+            Eng(), env, tok,
+            RolloutConfig(max_turns=4, group_size=1, mode="continuous",
+                          n_slots=2))
+        trajs = worker.rollout([("task-0", "t0"), ("task-1", "t1")],
+                               jax.random.PRNGKey(0))
+        assert len(trajs) == 2
+        assert worker.last_stats["tool_timeouts"] == 1.0
+        # per-tool counter on the process registry too
+        assert o.registry.snapshot()["tool/timeouts:hang"] == 1.0
+        # the timed-out call still produced an ERROR observation the
+        # trajectory carries (tool failure is an observation, not a crash)
+        assert "TimeoutError" in tok.decode(trajs[0].tokens())
+
+
+# ------------------------------------------------------------ parity
+@pytest.fixture(scope="module")
+def tiny_setup():
+    from repro.configs import get_config
+    from repro.data.tokenizer import default_tokenizer
+    from repro.models import Model
+    from repro.tools.search_env import SearchEnv
+    cfg = get_config("tiny")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = default_tokenizer(cfg.vocab_size)
+    env = SearchEnv(n_entities=30, seed=0)
+    return cfg, model, params, tok, env
+
+
+def _tiny_rollout(tiny_setup):
+    from repro.core.rollout import RolloutConfig, RolloutWorker
+    from repro.serving.engine import GenerationEngine
+    cfg, model, params, tok, env = tiny_setup
+    engine = GenerationEngine(model, params, pad_id=tok.pad_id,
+                              stop_ids=(tok.eos_id,), max_len=512)
+    worker = RolloutWorker(engine, env, tok,
+                           RolloutConfig(max_turns=2, max_new_tokens=8,
+                                         group_size=2, n_slots=2))
+    trajs = worker.rollout(env.sample_tasks(2, seed=1), jax.random.PRNGKey(0))
+    return [t.tokens() for t in trajs], worker.last_stats
+
+
+def test_obs_enabled_rollout_token_identical_to_disabled(tiny_setup,
+                                                         tmp_path):
+    """Tracing + metrics must be pure observers: enabling them cannot change
+    a single sampled token."""
+    with obs.scoped(metrics=False, trace=False):
+        toks_off, _ = _tiny_rollout(tiny_setup)
+    with obs.scoped(metrics=True, trace=True, trace_dir=str(tmp_path)) as o:
+        toks_on, stats_on = _tiny_rollout(tiny_setup)
+    assert toks_on == toks_off
+    # and the enabled run actually produced a valid trace with per-
+    # trajectory retire spans
+    import glob
+    files = glob.glob(str(tmp_path / "*.trace.json"))
+    assert files
+    obj = json.load(open(files[0]))
+    assert obs.validate_chrome_trace(obj) == []
+    retires = [e for e in obj["traceEvents"] if e["name"] == "retire"]
+    assert len(retires) == len(toks_on)
+
+
+def test_last_stats_key_set_stable_across_paths(tiny_setup):
+    """The finalize helper is the single source of last_stats: an exhausted
+    stream and an abandoned stream report the same key set."""
+    from repro.core.rollout import RolloutConfig, RolloutWorker
+    from repro.serving.engine import GenerationEngine
+    cfg, model, params, tok, env = tiny_setup
+
+    def mk():
+        engine = GenerationEngine(model, params, pad_id=tok.pad_id,
+                                  stop_ids=(tok.eos_id,), max_len=512)
+        return RolloutWorker(engine, env, tok,
+                             RolloutConfig(max_turns=2, max_new_tokens=8,
+                                           group_size=1, n_slots=2))
+
+    w1 = mk()
+    list(w1.rollout_stream(env.sample_tasks(2, seed=1),
+                           jax.random.PRNGKey(0)))
+    w2 = mk()
+    stream = w2.rollout_stream(env.sample_tasks(2, seed=1),
+                               jax.random.PRNGKey(0))
+    next(stream)
+    stream.close()                      # abandon mid-stream
+    assert set(w1.last_stats) == set(w2.last_stats)
+    assert "tool_timeouts" in w1.last_stats
+    assert "decode_round_p50_s" in w1.last_stats
+
+
+# ------------------------------------------------------------- webui
+def test_webui_tail_cache_incremental_and_corrupt_counts(tmp_path,
+                                                         monkeypatch):
+    from repro.webui import server
+
+    results = tmp_path / "results"
+    (results / "train").mkdir(parents=True)
+    monkeypatch.setattr(server, "RESULTS", str(results))
+    monkeypatch.setattr(server, "_tail", server._TailCache())
+
+    log = results / "train" / "run.jsonl"
+    log.write_text('{"step": 1}\n{"step": 2}\n')
+    runs = server.load_runs()
+    assert [r["step"] for r in runs["run.jsonl"]] == [1, 2]
+
+    # append: only the new lines are parsed (corrupt one counted, partial
+    # trailing line left for the next poll)
+    with open(log, "a") as f:
+        f.write('not json\n{"step": 3}\n{"par')
+    runs = server.load_runs()
+    assert [r["step"] for r in runs["run.jsonl"]] == [1, 2, 3]
+    assert server.corrupt_counts()["run.jsonl"] == 1
+
+    # the partial line completes → parsed exactly once
+    with open(log, "a") as f:
+        f.write('tial": 4}\n')
+    runs = server.load_runs()
+    assert runs["run.jsonl"][-1] == {"partial": 4}
+    assert server.corrupt_counts()["run.jsonl"] == 1
+
+    # truncation (rewritten file) resets the entry instead of mis-seeking
+    log.write_text('{"step": 9}\n')
+    runs = server.load_runs()
+    assert [r["step"] for r in runs["run.jsonl"]] == [9]
+
+
+def test_webui_metrics_and_trace_endpoints(tmp_path, monkeypatch):
+    from http.server import ThreadingHTTPServer
+    from repro.webui import server
+
+    results = tmp_path / "results"
+    (results / "trace").mkdir(parents=True)
+    monkeypatch.setattr(server, "RESULTS", str(results))
+
+    with obs.scoped(trace=True, trace_dir=str(results / "trace")) as o:
+        o.registry.counter("rollout/rounds").add(7)
+        o.tracer.complete("slot0", "decode_round", 0.0, 0.001)
+        o.tracer.export("webui")
+
+        srv = ThreadingHTTPServer(("127.0.0.1", 0), server.Handler)
+        t = threading.Thread(target=srv.serve_forever, daemon=True)
+        t.start()
+        try:
+            port = srv.server_address[1]
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/api/metrics", timeout=10) as r:
+                snap = json.loads(r.read())
+            assert snap["rollout/rounds"] == 7.0
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/api/trace", timeout=10) as r:
+                tr = json.loads(r.read())
+            assert tr["files"] and tr["latest"] is not None
+            assert obs.validate_chrome_trace(tr["latest"]) == []
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/trace", timeout=10) as r:
+                page = r.read().decode()
+            assert "RLFactory-JAX" in page and "timeline" in page
+        finally:
+            srv.shutdown()
