@@ -48,10 +48,10 @@ OVERHEAD_GATE = 0.02
 
 def _micro():
     null_reg = obs.MetricsRegistry(enabled=False)
-    nc, nt = null_reg.counter("x"), null_reg.timer("t")
+    nc, nt = null_reg.counter("x"), null_reg.timer("t")  # lint: disable=obs-discipline
     ntr = obs.NULL_TRACER
     reg = obs.MetricsRegistry()
-    c, t = reg.counter("x"), reg.timer("t")
+    c, t = reg.counter("x"), reg.timer("t")  # lint: disable=obs-discipline
     tr = obs.SpanTracer()
     ops = {
         "null_counter_add": lambda: nc.add(),

@@ -63,7 +63,8 @@ def main(argv=None) -> int:
         t0 = time.monotonic()
         try:
             rows = _resolve(modname).main() or []
-        except Exception as e:  # a missing artifact must not kill the harness
+        # a missing artifact must not kill the harness; the row shows ERROR
+        except Exception as e:  # lint: disable=broad-except
             print(f"{label},ERROR,{type(e).__name__}: {e}")
             rows = []
         all_rows.extend(rows)

@@ -1,17 +1,26 @@
 #!/usr/bin/env bash
-# Pre-push gate: quick test tier + benchmark-registry smoke.
+# Pre-push gate: lint + quick test tier + benchmark-registry smoke + traced
+# rollout with happens-before verification.
 #
 #   scripts/check.sh            # from anywhere inside the repo
 #
-# Runs the non-slow pytest tier (the ROADMAP tier-1 set minus the long
-# integration runs), imports every registered benchmark via
-# `benchmarks/run.py --list` so a broken registry entry fails fast without
-# paying for an actual benchmark run, and finishes with the trace smoke: a
-# tiny traced rollout whose exported Chrome trace is schema-validated.
+# Order: the repo-specific linter first (cheapest, purely static — see
+# src/repro/analysis/), then the non-slow pytest tier (the ROADMAP tier-1
+# set minus the long integration runs), then imports every registered
+# benchmark via `benchmarks/run.py --list` so a broken registry entry fails
+# fast without paying for an actual benchmark run, then the trace smoke (a
+# tiny traced rollout on the real paged engine, schema-validated), and
+# finally trace_check replays that fresh export against the scheduler's
+# happens-before contract (retire terminal, prefill-after-admission,
+# round-boundary weight refresh, copy-on-write on shared tails).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+TRACE_DIR="${TRACE_DIR:-results/trace}"
+
+python scripts/lint.py
 PYTHONPATH=src python -m pytest -m "not slow" -q
 PYTHONPATH=src:. python benchmarks/run.py --list
-PYTHONPATH=src:. python scripts/trace_smoke.py
+PYTHONPATH=src:. python scripts/trace_smoke.py --trace-dir "$TRACE_DIR"
+PYTHONPATH=src python -m repro.analysis.trace_check "$TRACE_DIR"
 echo "check.sh: all green"

@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Repo-specific linter — the static half of ``repro.analysis``.
+
+Runs the AST rule set (async-hygiene, jit-purity, resource-pairing,
+obs-discipline, broad-except) over the given paths and fails on any
+finding that is neither inline-suppressed nor grandfathered in the
+checked-in baseline.
+
+    python scripts/lint.py                      # src benchmarks scripts
+    python scripts/lint.py src/repro/core       # narrower sweep
+    python scripts/lint.py --rule jit-purity    # one rule
+    python scripts/lint.py --baseline-update    # re-grandfather findings
+    python scripts/lint.py --json               # machine-readable
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis import Baseline, LintEngine, default_rules  # noqa: E402
+
+DEFAULT_PATHS = ("src", "benchmarks", "scripts")
+DEFAULT_BASELINE = os.path.join("scripts", "lint_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help=f"files/directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--rule", action="append", dest="rules", default=None,
+                    metavar="NAME",
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline file (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report grandfathered findings too")
+    ap.add_argument("--baseline-update", action="store_true",
+                    help="rewrite the baseline from current findings and "
+                         "exit 0")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    args = ap.parse_args(argv)
+
+    rules = default_rules()
+    if args.rules:
+        known = {r.name for r in rules}
+        unknown = [n for n in args.rules if n not in known]
+        if unknown:
+            ap.error(f"unknown rule(s) {unknown}; "
+                     f"available: {sorted(known)}")
+        rules = [r for r in rules if r.name in args.rules]
+
+    baseline_path = (args.baseline if os.path.isabs(args.baseline)
+                     else os.path.join(_ROOT, args.baseline))
+    baseline = Baseline() if (args.no_baseline or args.baseline_update) \
+        else Baseline.load(baseline_path)
+    engine = LintEngine(rules, baseline=baseline)
+    report = engine.run(args.paths, root=_ROOT)
+
+    if args.baseline_update:
+        Baseline.from_findings(report.findings).save(baseline_path)
+        print(f"baseline updated: {len(report.findings)} finding(s) -> "
+              f"{os.path.relpath(baseline_path, _ROOT)}")
+        return 0
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [f.to_json() for f in report.findings],
+            "suppressed": [f.to_json() for f in report.suppressed],
+            "baselined": [f.to_json() for f in report.baselined],
+            "errors": report.errors,
+            "n_files": report.n_files,
+            "clean": report.clean,
+        }, indent=2))
+    else:
+        for f in report.findings:
+            print(f.format())
+        for e in report.errors:
+            print(f"PARSE ERROR: {e}")
+        print(f"lint: {report.summary()}")
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,7 @@ import glob
 import json
 import os
 import sys
+import time
 
 import jax
 
@@ -70,10 +71,17 @@ def main(argv=None) -> int:
     params = model.init(jax.random.PRNGKey(0))
     tok = default_tokenizer(cfg.vocab_size)
 
-    before = set(glob.glob(os.path.join(args.trace_dir, "*.trace.json")))
+    # The exporter numbers files per process (rollout_0001, ...), so a rerun
+    # against the same dir rewrites the same name — detect the fresh export
+    # by mtime, not by filename novelty.
+    start = time.time()
     with obs.scoped(trace=True, trace_dir=args.trace_dir):
+        # paged + prefix sharing: GRPO group members (group_size=2 below)
+        # share their prompt tail, so the trace also carries the
+        # shared_tail / cow events trace_check's CoW contract needs
         engine = GenerationEngine(model, params, pad_id=tok.pad_id,
-                                  stop_ids=(tok.eos_id,), max_len=512)
+                                  stop_ids=(tok.eos_id,), max_len=512,
+                                  cache_mode="paged", page_size=16)
         worker = RolloutWorker(
             engine, env, tok,
             RolloutConfig(max_turns=2, max_new_tokens=8, group_size=2,
@@ -82,8 +90,9 @@ def main(argv=None) -> int:
         trajs = worker.rollout(tasks, jax.random.PRNGKey(0))
         stats = worker.last_stats
 
-    new = sorted(set(glob.glob(os.path.join(args.trace_dir,
-                                            "*.trace.json"))) - before)
+    new = sorted(p for p in glob.glob(os.path.join(args.trace_dir,
+                                                   "*.trace.json"))
+                 if os.path.getmtime(p) >= start)
     if not new:
         print(f"trace_smoke: FAIL — no trace exported to {args.trace_dir}")
         return 1

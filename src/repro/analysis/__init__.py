@@ -1,0 +1,44 @@
+"""Repo-specific static analysis: the lint rule engine, the rule set, and
+the trace-based happens-before checker.
+
+The concurrency and resource protocols this framework's claims rest on
+(background-loop-only awaits, allocator refcounts, weight-version
+pin/unpin, round-boundary-only weight swaps) are enforced at runtime by
+tests — this package makes them machine-checkable *before* anything runs:
+
+* :mod:`repro.analysis.engine` — AST-walking lint engine with per-rule
+  findings, inline ``# lint: disable=<rule>`` suppressions and a
+  checked-in baseline for grandfathered findings;
+* :mod:`repro.analysis.rules` — the repo-specific rule set
+  (async-hygiene, jit-purity, resource-pairing, obs-discipline,
+  broad-except);
+* :mod:`repro.analysis.trace_check` — a dynamic race/invariant detector
+  that replays an exported Chrome trace (obs.SpanTracer) and asserts the
+  scheduler's happens-before contract per trajectory.
+
+CLI entry points: ``scripts/lint.py`` and
+``python -m repro.analysis.trace_check`` — both wired into
+``scripts/check.sh``.
+"""
+from __future__ import annotations
+
+from .engine import (Baseline, Finding, LintEngine, Module, Report,
+                     iter_python_files)
+from .rules import ALL_RULES, default_rules
+
+__all__ = [
+    "Baseline", "Finding", "LintEngine", "Module", "Report",
+    "iter_python_files", "ALL_RULES", "default_rules",
+    "Violation", "check_trace", "check_trace_file",
+]
+
+_TRACE_CHECK = ("Violation", "check_trace", "check_trace_file")
+
+
+def __getattr__(name):
+    # Lazy so `python -m repro.analysis.trace_check` doesn't import the
+    # submodule twice (runpy warns when __init__ pre-imports the target).
+    if name in _TRACE_CHECK:
+        from . import trace_check
+        return getattr(trace_check, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

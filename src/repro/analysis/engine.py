@@ -1,0 +1,238 @@
+"""AST-walking lint engine.
+
+The engine owns the mechanics — file walking, parsing, suppression
+comments, the grandfathered-findings baseline — while every *rule* is a
+small object with a ``name`` and a ``check(module)`` generator (see
+:mod:`repro.analysis.rules`).  Rules see a :class:`Module`: the parsed
+AST plus the raw source lines, so they can attach the flagged line's text
+to each finding (the baseline fingerprints findings by
+``(rule, path, line text)`` rather than line *number*, so unrelated edits
+above a grandfathered finding do not resurrect it).
+
+Suppressions::
+
+    something_flagged()   # lint: disable=rule-name (why this is the contract)
+    # lint: disable-file=rule-name   -- anywhere in the file: whole-file opt-out
+
+A finding on a line carrying a matching ``disable=`` comment is counted as
+suppressed, not reported.  Suppressions are deliberate and reviewable;
+the baseline is for pre-existing findings that should burn down over time
+(``scripts/lint.py --baseline-update`` regenerates it — new code must be
+clean, old findings are tolerated until removed).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+_SUPPRESS_RE = re.compile(r"#\s*lint:\s*disable=([\w\-]+(?:\s*,\s*[\w\-]+)*)")
+_SUPPRESS_FILE_RE = re.compile(
+    r"#\s*lint:\s*disable-file=([\w\-]+(?:\s*,\s*[\w\-]+)*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative, posix separators
+    line: int          # 1-based
+    message: str
+    text: str = ""     # stripped source of the flagged line (baseline key)
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.text)
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Module:
+    """One parsed source file, handed to every rule."""
+
+    def __init__(self, path: str, rel: str, source: str):
+        self.path = path
+        self.rel = rel.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node, message: str) -> Finding:
+        """Build a finding anchored at ``node`` (an AST node or an int
+        line number)."""
+        line = node if isinstance(node, int) else getattr(node, "lineno", 1)
+        return Finding(rule=rule, path=self.rel, line=line, message=message,
+                       text=self.line_text(line))
+
+    # ------------------------------------------------------- suppressions
+    def suppressions(self) -> Tuple[Dict[int, set], set]:
+        """``(per_line, whole_file)`` rule-name suppression sets."""
+        per_line: Dict[int, set] = {}
+        whole: set = set()
+        for i, line in enumerate(self.lines, start=1):
+            if "lint:" not in line:
+                continue
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                per_line.setdefault(i, set()).update(
+                    r.strip() for r in m.group(1).split(","))
+            m = _SUPPRESS_FILE_RE.search(line)
+            if m:
+                whole.update(r.strip() for r in m.group(1).split(","))
+        return per_line, whole
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    suppressed: List[Finding] = dataclasses.field(default_factory=list)
+    baselined: List[Finding] = dataclasses.field(default_factory=list)
+    errors: List[str] = dataclasses.field(default_factory=list)
+    n_files: int = 0
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings and not self.errors
+
+    def summary(self) -> str:
+        return (f"{len(self.findings)} finding(s) in {self.n_files} file(s) "
+                f"({len(self.suppressed)} suppressed, "
+                f"{len(self.baselined)} baselined"
+                + (f", {len(self.errors)} parse error(s)" if self.errors
+                   else "") + ")")
+
+
+def iter_python_files(paths: Sequence[str],
+                      root: str = ".") -> Iterator[Tuple[str, str]]:
+    """Yield ``(abs_path, rel_path)`` for every ``.py`` under ``paths``
+    (files are taken verbatim; directories are walked, skipping hidden
+    dirs and ``__pycache__``), deterministic order."""
+    out: List[Tuple[str, str]] = []
+    root = os.path.abspath(root)
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap):
+            out.append((ap, os.path.relpath(ap, root)))
+            continue
+        for dirpath, dirnames, filenames in os.walk(ap):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if not d.startswith(".")
+                                 and d != "__pycache__")
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    full = os.path.join(dirpath, fn)
+                    out.append((full, os.path.relpath(full, root)))
+    seen = set()
+    for ap, rel in sorted(out, key=lambda t: t[1]):
+        if rel not in seen:
+            seen.add(rel)
+            yield ap, rel
+
+
+class Baseline:
+    """Grandfathered findings, keyed by ``(rule, path, line text)`` with a
+    multiplicity budget — line-number independent, so drift above a
+    grandfathered line does not resurrect it, while a *new* identical
+    violation in the same file still fails once the budget is spent."""
+
+    def __init__(self, entries: Optional[Dict[Tuple[str, str, str], int]]
+                 = None):
+        self.entries: Dict[Tuple[str, str, str], int] = dict(entries or {})
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.exists(path):
+            return cls()
+        with open(path) as f:
+            obj = json.load(f)
+        entries: Dict[Tuple[str, str, str], int] = {}
+        for e in obj.get("findings", []):
+            key = (e["rule"], e["path"], e["text"])
+            entries[key] = entries.get(key, 0) + int(e.get("count", 1))
+        return cls(entries)
+
+    @classmethod
+    def from_findings(cls, findings: Iterable[Finding]) -> "Baseline":
+        entries: Dict[Tuple[str, str, str], int] = {}
+        for f in findings:
+            entries[f.key()] = entries.get(f.key(), 0) + 1
+        return cls(entries)
+
+    def save(self, path: str) -> None:
+        rows = [{"rule": r, "path": p, "text": t, "count": c}
+                for (r, p, t), c in sorted(self.entries.items())]
+        with open(path, "w") as f:
+            json.dump({"version": 1, "findings": rows}, f, indent=1)
+            f.write("\n")
+
+    def split(self, findings: Sequence[Finding]
+              ) -> Tuple[List[Finding], List[Finding]]:
+        """Partition into ``(new, grandfathered)``, consuming budget."""
+        budget = dict(self.entries)
+        new: List[Finding] = []
+        old: List[Finding] = []
+        for f in findings:
+            k = f.key()
+            if budget.get(k, 0) > 0:
+                budget[k] -= 1
+                old.append(f)
+            else:
+                new.append(f)
+        return new, old
+
+
+class LintEngine:
+    """Run a rule set over files, applying suppressions and a baseline."""
+
+    def __init__(self, rules: Sequence, baseline: Optional[Baseline] = None):
+        self.rules = list(rules)
+        self.baseline = baseline or Baseline()
+        names = [r.name for r in self.rules]
+        assert len(names) == len(set(names)), f"duplicate rule names: {names}"
+
+    def lint_module(self, module: Module
+                    ) -> Tuple[List[Finding], List[Finding]]:
+        """``(kept, suppressed)`` findings for one parsed module."""
+        per_line, whole = module.suppressions()
+        kept: List[Finding] = []
+        suppressed: List[Finding] = []
+        for rule in self.rules:
+            for f in rule.check(module):
+                if f.rule in whole or f.rule in per_line.get(f.line, ()):
+                    suppressed.append(f)
+                else:
+                    kept.append(f)
+        return kept, suppressed
+
+    def run(self, paths: Sequence[str], root: str = ".",
+            apply_baseline: bool = True) -> Report:
+        rep = Report()
+        all_found: List[Finding] = []
+        for ap, rel in iter_python_files(paths, root=root):
+            rep.n_files += 1
+            try:
+                with open(ap, encoding="utf-8") as f:
+                    source = f.read()
+                module = Module(ap, rel, source)
+            except (SyntaxError, UnicodeDecodeError) as e:
+                rep.errors.append(f"{rel}: {type(e).__name__}: {e}")
+                continue
+            kept, suppressed = self.lint_module(module)
+            all_found.extend(kept)
+            rep.suppressed.extend(suppressed)
+        if apply_baseline:
+            rep.findings, rep.baselined = self.baseline.split(all_found)
+        else:
+            rep.findings = all_found
+        rep.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+        return rep

@@ -1,0 +1,36 @@
+"""Repo-specific lint rules.
+
+Each rule is a plain object with ``name``, ``description``, and
+``check(module) -> Iterator[Finding]``; ``default_rules()`` builds the
+set `scripts/lint.py` and `scripts/check.sh` run with.
+"""
+from __future__ import annotations
+
+from repro.analysis.rules.async_hygiene import AsyncHygieneRule
+from repro.analysis.rules.broad_except import BroadExceptRule
+from repro.analysis.rules.jit_purity import JitPurityRule
+from repro.analysis.rules.obs_discipline import ObsDisciplineRule
+from repro.analysis.rules.resource_pairing import ResourcePairingRule
+
+ALL_RULES = (
+    AsyncHygieneRule,
+    BroadExceptRule,
+    JitPurityRule,
+    ObsDisciplineRule,
+    ResourcePairingRule,
+)
+
+
+def default_rules():
+    return [cls() for cls in ALL_RULES]
+
+
+__all__ = [
+    "ALL_RULES",
+    "default_rules",
+    "AsyncHygieneRule",
+    "BroadExceptRule",
+    "JitPurityRule",
+    "ObsDisciplineRule",
+    "ResourcePairingRule",
+]

@@ -1,0 +1,115 @@
+"""async-hygiene: the background-loop contract, statically.
+
+The framework's tool path runs blocking callers *around* a persistent
+asyncio loop (``tools/background.py``); the two historical crash classes —
+``asyncio.run`` inside a running loop and a blocking wait executed on the
+loop's own thread — are both patterns this rule catches at lint time:
+
+* inside ``async def``: no ``time.sleep`` (blocks the whole loop), no
+  blocking ``.result()`` / ``run_until_complete`` / ``run_sync`` /
+  ``asyncio.run`` (deadlocks or crashes when awaited code blocks on the
+  loop it runs on);
+* anywhere in *library* code (paths under ``src/``): no ``asyncio.run``
+  at all — route through ``tools.background.run_sync``, which is safe
+  whether or not the calling thread already has a loop;
+* no fire-and-forget ``create_task`` / ``ensure_future`` statements: a
+  dropped task reference can be garbage-collected mid-flight and its
+  exceptions are silently lost — keep the handle or await it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Sequence, Tuple
+
+from repro.analysis.engine import Finding, Module
+from repro.analysis.rules.common import (call_tail, dotted_name, iter_calls,
+                                         iter_functions, walk_function_body)
+
+# blocked inside ``async def`` bodies: (matcher kind, name, message)
+_BLOCKING_IN_ASYNC = {
+    "time.sleep": "time.sleep blocks the event loop; await asyncio.sleep",
+    "asyncio.run": "asyncio.run inside a coroutine crashes on the running "
+                   "loop; await the coroutine directly",
+    "run_sync": "run_sync blocks on the background loop from inside a "
+                "coroutine (deadlock if already on that loop); await the "
+                "async variant",
+}
+_BLOCKING_TAILS = {
+    "result": "blocking Future.result() inside a coroutine can deadlock "
+              "the loop it runs on; await the future/coroutine instead",
+    "run_until_complete": "run_until_complete inside a coroutine re-enters "
+                          "the loop; await instead",
+}
+_FIRE_AND_FORGET = ("create_task", "ensure_future")
+
+
+class AsyncHygieneRule:
+    name = "async-hygiene"
+    description = ("no blocking calls inside coroutines; no asyncio.run in "
+                   "library code; no fire-and-forget create_task")
+
+    def __init__(self, library_prefixes: Sequence[str] = ("src/",)):
+        self.library_prefixes = tuple(library_prefixes)
+
+    def _is_library(self, module: Module) -> bool:
+        return any(module.rel.startswith(p) for p in self.library_prefixes)
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        # 1) blocking calls inside async def bodies
+        for fn in iter_functions(module.tree):
+            if not isinstance(fn, ast.AsyncFunctionDef):
+                continue
+            for node in walk_function_body(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                tail = call_tail(node)
+                if name in _BLOCKING_IN_ASYNC or tail in _BLOCKING_IN_ASYNC:
+                    msg = _BLOCKING_IN_ASYNC.get(
+                        name, _BLOCKING_IN_ASYNC.get(tail, ""))
+                    yield module.finding(
+                        self.name, node,
+                        f"blocking call in async def {fn.name!r}: {msg}")
+                elif tail in _BLOCKING_TAILS and not node.args \
+                        and not node.keywords \
+                        and isinstance(node.func, ast.Attribute):
+                    yield module.finding(
+                        self.name, node,
+                        f"blocking call in async def {fn.name!r}: "
+                        f"{_BLOCKING_TAILS[tail]}")
+                elif tail == "run_until_complete":
+                    yield module.finding(
+                        self.name, node,
+                        f"blocking call in async def {fn.name!r}: "
+                        f"{_BLOCKING_TAILS['run_until_complete']}")
+
+        # 2) asyncio.run anywhere in library code (sync contexts included):
+        #    the caller cannot know it is not already inside a loop —
+        #    route through tools.background.run_sync
+        if self._is_library(module):
+            async_lines = set()
+            for fn in iter_functions(module.tree):
+                if isinstance(fn, ast.AsyncFunctionDef):
+                    for node in walk_function_body(fn):
+                        if isinstance(node, ast.Call):
+                            async_lines.add(node.lineno)
+            for node in iter_calls(module.tree):
+                if dotted_name(node.func) == "asyncio.run" \
+                        and node.lineno not in async_lines:
+                    yield module.finding(
+                        self.name, node,
+                        "asyncio.run in library code crashes when a loop is "
+                        "already running; use tools.background.run_sync")
+
+        # 3) fire-and-forget create_task / ensure_future statements
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Expr) \
+                    or not isinstance(node.value, ast.Call):
+                continue
+            call = node.value
+            if call_tail(call) in _FIRE_AND_FORGET:
+                yield module.finding(
+                    self.name, call,
+                    f"fire-and-forget {call_tail(call)}: the task handle is "
+                    "dropped (GC can cancel it; exceptions are lost) — "
+                    "assign it, await it, or track it in a collection")

@@ -1,0 +1,57 @@
+"""broad-except: every catch-all must be a deliberate, observable choice.
+
+``except Exception`` at a rollout boundary is sometimes right — a tool
+crash is an observation, not a trainer crash — but an *unannotated*
+catch-all swallows scheduler bugs the same way it swallows tool bugs.
+The rule flags every ``except Exception`` / ``except BaseException`` /
+bare ``except:``; the legitimate sites carry an inline
+``# lint: disable=broad-except — <reason>`` and route the failure
+through an obs counter so degradations show up on the dashboards
+instead of only in stderr.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import Finding, Module
+from repro.analysis.rules.common import dotted_name
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _broad_name(expr) -> str:
+    """'Exception'/'BaseException' if the handler type (or a member of a
+    tuple of types) is one, else ''."""
+    if expr is None:
+        return "<bare>"
+    if isinstance(expr, ast.Tuple):
+        for el in expr.elts:
+            name = _broad_name(el)
+            if name:
+                return name
+        return ""
+    name = dotted_name(expr)
+    tail = name.rsplit(".", 1)[-1] if name else ""
+    return tail if tail in _BROAD else ""
+
+
+class BroadExceptRule:
+    name = "broad-except"
+    description = ("except Exception / bare except needs narrowing, or an "
+                   "inline suppression with a reason plus an obs counter")
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            broad = _broad_name(node.type)
+            if not broad:
+                continue
+            what = ("bare except" if broad == "<bare>"
+                    else f"except {broad}")
+            yield module.finding(
+                self.name, node,
+                f"{what}: narrow to the failure you expect, or keep the "
+                "catch-all deliberately — count it on an obs counter and "
+                "suppress this line with the reason")

@@ -1,0 +1,85 @@
+"""Shared AST helpers for the rule set."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+
+def dotted_name(node) -> str:
+    """Best-effort dotted name of an expression (``asyncio.run``,
+    ``jax.lax.while_loop``, ``self.engine.pin_version``); "" when the
+    expression is not a plain name/attribute chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    if parts:                       # e.g. ``fut().result`` -> ".result"
+        return "." + ".".join(reversed(parts))
+    return ""
+
+
+def call_tail(node: ast.Call) -> str:
+    """Last attribute segment of a call's function (``result`` for both
+    ``fut.result()`` and ``self.x.result()``); the bare name for
+    ``print()``-style calls."""
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+def iter_calls(tree) -> Iterator[ast.Call]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def iter_functions(tree) -> Iterator:
+    """Every (async) function def in the tree, nested ones included."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def walk_function_body(fn, into_nested: bool = False) -> Iterator:
+    """Walk a function's body.  With ``into_nested=False``, nodes inside
+    nested (async) defs and lambdas are skipped — they execute in their own
+    context, not the enclosing function's."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if not into_nested and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def enclosing_function_names(tree) -> Dict[int, Tuple[str, ...]]:
+    """Map every node id to the stack of enclosing function names (outermost
+    first) — used by rules that exempt specific functions by name."""
+    out: Dict[int, Tuple[str, ...]] = {}
+
+    def visit(node, stack: Tuple[str, ...]) -> None:
+        out[id(node)] = stack
+        child_stack = stack
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            child_stack = stack + (node.name,)
+        for child in ast.iter_child_nodes(node):
+            visit(child, child_stack)
+
+    visit(tree, ())
+    return out
+
+
+def str_arg(node: ast.Call, index: int = 0) -> Optional[str]:
+    """The ``index``-th positional arg if it is a string literal."""
+    if len(node.args) > index and isinstance(node.args[index], ast.Constant) \
+            and isinstance(node.args[index].value, str):
+        return node.args[index].value
+    return None

@@ -1,0 +1,171 @@
+"""jit-purity: no host synchronization inside traced code.
+
+The decode hot path is one fused jitted ``lax.while_loop``; a single
+``float()`` / ``.item()`` / ``np.asarray`` / ``print`` on a traced value
+inside it forces a device→host transfer per step — exactly the class of
+stall the fused loop exists to eliminate (and, under ``jit``, usually a
+``TracerError`` only on an untested branch).  This rule marks *traced
+regions* and bans host-sync calls inside them.
+
+A function body is traced when it is:
+
+* decorated with ``jax.jit`` / ``jit`` / ``functools.partial(jax.jit, …)``
+  (``pmap`` likewise);
+* referenced by name in a ``jax.jit(f)`` / ``jit(self._impl)`` call in the
+  same module;
+* passed as the operand of ``lax.while_loop`` / ``lax.scan`` /
+  ``lax.fori_loop`` / ``lax.cond`` / ``lax.switch`` /
+  ``pl.pallas_call`` (lambdas included);
+* nested inside any traced region.
+
+The resolver is intraprocedural and name-based on purpose: it cannot
+prove a ``float()`` argument is traced rather than static, so the banned
+set contains only calls that are *always* wrong on traced values and
+whose static uses are rare inside jit bodies.  Rare legitimate uses
+(e.g. ``int()`` on a static shape) carry an inline suppression.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set
+
+from repro.analysis.engine import Finding, Module
+from repro.analysis.rules.common import dotted_name, iter_calls
+
+_JIT_NAMES = {"jax.jit", "jit", "jax.pmap", "pmap"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+# call name -> positional indices of traced callables
+_TRACED_OPERANDS = {
+    "while_loop": (0, 1),       # cond, body
+    "scan": (0,),
+    "fori_loop": (2,),          # lower, upper, body
+    "cond": (1, 2),             # pred, true_fn, false_fn
+    "switch": (),               # branch list handled specially
+    "pallas_call": (0,),
+}
+_BANNED_SIMPLE = {
+    "float": "float() on a traced value forces a host sync",
+    "int": "int() on a traced value forces a host sync",
+    "bool": "bool() on a traced value forces a host sync (and raises under "
+            "jit on data-dependent values)",
+    "print": "print inside a traced body runs at trace time only (or forces "
+             "a host sync via a side effect); use jax.debug.print",
+}
+_BANNED_DOTTED = {
+    "jax.device_get": "device_get inside a traced body is a host sync",
+    "np.asarray": "np.asarray on a traced value forces a host transfer; use "
+                  "jnp.asarray",
+    "np.array": "np.array on a traced value forces a host transfer; use "
+                "jnp.asarray",
+    "numpy.asarray": "numpy.asarray on a traced value forces a host "
+                     "transfer; use jnp.asarray",
+    "numpy.array": "numpy.array on a traced value forces a host transfer; "
+                   "use jnp.asarray",
+}
+
+
+def _is_jit_decorator(dec) -> bool:
+    if dotted_name(dec) in _JIT_NAMES:
+        return True
+    if isinstance(dec, ast.Call):
+        fn = dotted_name(dec.func)
+        if fn in _JIT_NAMES:
+            return True
+        if fn in _PARTIAL_NAMES and dec.args \
+                and dotted_name(dec.args[0]) in _JIT_NAMES:
+            return True
+    return False
+
+
+class JitPurityRule:
+    name = "jit-purity"
+    description = "no host-sync calls (float/int/.item/np.asarray/print/" \
+                  "device_get) inside jit, lax control flow, or pallas bodies"
+
+    def _traced_regions(self, module: Module) -> List[ast.AST]:
+        """Function/lambda nodes whose bodies execute under a trace."""
+        defs_by_name: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs_by_name.setdefault(node.name, []).append(node)
+
+        regions: List[ast.AST] = []
+        seen: Set[int] = set()
+
+        def mark(node) -> None:
+            if node is None or id(node) in seen:
+                return
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                seen.add(id(node))
+                regions.append(node)
+
+        def resolve(arg) -> None:
+            """Mark a callable operand: a lambda literal, or a same-module
+            def matched by (last) name — ``self._impl`` matches the method
+            def ``_impl``."""
+            if isinstance(arg, ast.Lambda):
+                mark(arg)
+                return
+            name = dotted_name(arg)
+            if not name:
+                return
+            tail = name.rsplit(".", 1)[-1]
+            for d in defs_by_name.get(tail, ()):
+                mark(d)
+
+        # decorated defs
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and any(_is_jit_decorator(d) for d in node.decorator_list):
+                mark(node)
+        # jit(f) / control-flow / pallas_call operands
+        for call in iter_calls(module.tree):
+            fname = dotted_name(call.func)
+            tail = fname.rsplit(".", 1)[-1] if fname else ""
+            if fname in _JIT_NAMES and call.args:
+                resolve(call.args[0])
+            elif tail in _TRACED_OPERANDS and (
+                    "lax" in fname or tail == "pallas_call"
+                    or fname == tail):
+                for idx in _TRACED_OPERANDS[tail]:
+                    if len(call.args) > idx:
+                        resolve(call.args[idx])
+                if tail == "switch" and len(call.args) > 1 \
+                        and isinstance(call.args[1], (ast.List, ast.Tuple)):
+                    for el in call.args[1].elts:
+                        resolve(el)
+        # transitive: defs nested inside a traced region are traced
+        frontier = list(regions)
+        while frontier:
+            region = frontier.pop()
+            for node in ast.walk(region):
+                if node is not region and isinstance(
+                        node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)) and id(node) not in seen:
+                    seen.add(id(node))
+                    regions.append(node)
+                    frontier.append(node)
+        return regions
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        reported: Set[int] = set()
+        for region in self._traced_regions(module):
+            rname = getattr(region, "name", "<lambda>")
+            for node in ast.walk(region):
+                if not isinstance(node, ast.Call) or id(node) in reported:
+                    continue
+                fname = dotted_name(node.func)
+                msg = None
+                if fname in _BANNED_DOTTED:
+                    msg = _BANNED_DOTTED[fname]
+                elif fname in _BANNED_SIMPLE and node.args:
+                    msg = _BANNED_SIMPLE[fname]
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" and not node.args:
+                    msg = ".item() inside a traced body is a host sync"
+                if msg is not None:
+                    reported.add(id(node))
+                    yield module.finding(
+                        self.name, node,
+                        f"host sync in traced region {rname!r}: {msg}")

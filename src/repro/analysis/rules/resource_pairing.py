@@ -1,0 +1,75 @@
+"""resource-pairing: acquire/release protocol completeness.
+
+The framework's resource protocols are refcount- or handle-shaped:
+weight-version pins (``pin_version`` must be balanced by
+``unpin_version`` or versions leak in the WeightStore and checkpoints
+grow unboundedly), shared-block mapping (``map_shared`` increments a
+refcount only ``free_rows`` decrements), executor futures (``submit``
+hands a future out; something must ``drain_ready`` / ``wait_ready`` /
+``result`` / ``forget`` it or tool results — and their exceptions — are
+silently dropped), and profiler windows (``start_trace`` without
+``stop_trace`` never flushes).
+
+The check is a lightweight dataflow approximation: acquire and release
+legitimately live in *different* functions of one lifecycle (pin at
+sample time, unpin at retire), so pairing is enforced at module scope —
+a module that calls an acquire method but never names its release
+anywhere is almost certainly leaking.  Findings anchor at each acquiring
+call with the enclosing function named, so the burn-down is per call
+site.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+from repro.analysis.engine import Finding, Module
+from repro.analysis.rules.common import (call_tail, enclosing_function_names,
+                                         iter_calls)
+
+# (acquire attr/name, (accepted release attrs/names, ...))
+DEFAULT_PAIRS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    ("pin_version", ("unpin_version",)),
+    ("map_shared", ("free_rows",)),
+    ("submit", ("drain_ready", "wait_ready", "result", "forget")),
+    ("start_trace", ("stop_trace",)),
+    ("begin", ("end",)),            # span-style begin/end APIs
+)
+
+
+class ResourcePairingRule:
+    name = "resource-pairing"
+    description = ("every acquire call (pin_version/map_shared/submit/"
+                   "start_trace) needs its release named in the same module")
+
+    def __init__(self, pairs: Sequence[Tuple[str, Tuple[str, ...]]]
+                 = DEFAULT_PAIRS):
+        self.pairs = tuple((a, tuple(r)) for a, r in pairs)
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        # every *called* method/function tail in the module (definitions do
+        # not count: defining ``unpin_version`` is not releasing anything)
+        acquires: Dict[str, List[ast.Call]] = {}
+        called: set = set()
+        for call in iter_calls(module.tree):
+            tail = call_tail(call)
+            if not tail:
+                continue
+            called.add(tail)
+            for acq, _ in self.pairs:
+                if tail == acq:
+                    acquires.setdefault(acq, []).append(call)
+        if not acquires:
+            return
+        enclosing = enclosing_function_names(module.tree)
+        for acq, releases in self.pairs:
+            if acq not in acquires or any(r in called for r in releases):
+                continue
+            for call in acquires[acq]:
+                stack = enclosing.get(id(call), ())
+                where = f" (in {stack[-1]!r})" if stack else ""
+                yield module.finding(
+                    self.name, call,
+                    f"{acq}() called{where} but no release "
+                    f"({' / '.join(releases)}) anywhere in this module — "
+                    "the resource leaks on every path")

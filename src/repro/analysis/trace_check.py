@@ -1,0 +1,339 @@
+"""Trace-based race / invariant detector for exported scheduler traces.
+
+The static rules in :mod:`repro.analysis.rules` prove code *shape*; this
+module replays an exported Chrome trace (``scripts/trace_smoke.py`` or
+any ``SpanTracer.export()`` output) and asserts the scheduler's
+**happens-before contract** on what actually executed:
+
+* ``retire`` is terminal — nothing is attributed to a job after its
+  retire span closes, and no job retires twice;
+* every job seen on a slot track was admitted through the queue first
+  (a ``queued`` span closes before its first slot event);
+* every ``prefill`` is preceded by an admission event — a ``queued``
+  close, a ``tool_wait`` close (observation landing), or a ``swap_in``;
+* ``swap_in`` requires a prior unmatched ``swap_out`` of the same job,
+  no decode round overlaps a job's swapped-out window, and no
+  ``swap_out`` fires inside a decode round (rows move between rounds);
+* ``weight_refresh`` instants land only *between* decode rounds — the
+  one-version-per-round attribution guarantee;
+* every ``cow`` instant sits inside a write window (a decode round on
+  that row's slot, or an imminent prefill);
+* after a prompt group shares a tail block (``shared_tail`` instants),
+  the first write must copy: a cluster of G rows sharing one leader
+  block must produce at least G-1 ``cow`` events among those rows
+  before they all decode — the *last* writer legitimately writes in
+  place at refcount 1, so the expected count is followers, not rows.
+
+All comparisons carry a sub-microsecond epsilon: "preceded by" is
+inclusive (zero-length ``queued`` spans are legal), "inside" is an open
+interval (boundary events are legal by construction).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.obs.trace import validate_chrome_trace
+
+EPS = 0.5                   # µs: clock-tie slack for ordering comparisons
+PREFILL_SLACK = 250_000.0   # µs: a cow must see a prefill start within this
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    code: str
+    message: str
+    t: float = 0.0          # trace timestamp (µs) the violation anchors at
+
+    def format(self) -> str:
+        return f"[{self.code}] t={self.t / 1e3:.3f}ms: {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Ev:
+    track: str
+    name: str
+    ts: float
+    end: float              # == ts for instants
+    args: dict
+
+
+def _events(obj) -> List[_Ev]:
+    tracks: Dict[object, str] = {}
+    for ev in obj["traceEvents"]:
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            tracks[ev.get("tid")] = ev.get("args", {}).get("name", "")
+    out: List[_Ev] = []
+    for ev in obj["traceEvents"]:
+        ph = ev.get("ph")
+        if ph not in ("X", "i"):
+            continue
+        ts = float(ev.get("ts", 0.0))
+        dur = float(ev.get("dur", 0.0)) if ph == "X" else 0.0
+        out.append(_Ev(track=tracks.get(ev.get("tid"), ""),
+                       name=str(ev.get("name", "")), ts=ts, end=ts + dur,
+                       args=ev.get("args", {}) or {}))
+    out.sort(key=lambda e: (e.ts, e.end))
+    return out
+
+
+def _slot_row(track: str) -> Optional[int]:
+    if track.startswith("slot") and track[4:].isdigit():
+        return int(track[4:])
+    return None
+
+
+def _job(ev: _Ev) -> Optional[int]:
+    j = ev.args.get("job")
+    return int(j) if isinstance(j, (int, float)) else None
+
+
+def check_trace(obj, require_complete: bool = True) -> List[Violation]:
+    """Replay one parsed Chrome trace object; return every contract
+    violation found (empty list = the trace is consistent).
+
+    ``require_complete`` additionally demands that every job seen on a
+    slot track retires — set it False for traces cut mid-stream.
+    """
+    schema = validate_chrome_trace(obj)
+    if schema:
+        return [Violation("schema", p) for p in schema]
+    evs = _events(obj)
+
+    queued = [e for e in evs if e.name == "queued"]
+    retires = [e for e in evs if e.name == "retire"]
+    decodes = [e for e in evs if e.name == "decode_round"]
+    prefills = [e for e in evs if e.name == "prefill"]
+    tool_waits = [e for e in evs if e.name == "tool_wait"]
+    swaps_out = [e for e in evs if e.name == "swap_out"]
+    swaps_in = [e for e in evs if e.name == "swap_in"]
+    refreshes = [e for e in evs if e.name == "weight_refresh"]
+    cows = [e for e in evs if e.name == "cow"]
+    shared = [e for e in evs if e.name == "shared_tail"]
+
+    v: List[Violation] = []
+
+    # ---- retire: exactly once per job, and terminal --------------------
+    slot_evs = [e for e in evs
+                if _slot_row(e.track) is not None and _job(e) is not None]
+    jobs_seen = sorted({_job(e) for e in slot_evs})
+    retire_end: Dict[int, float] = {}
+    for e in retires:
+        j = _job(e)
+        if j is None:
+            continue
+        if j in retire_end:
+            v.append(Violation(
+                "retire-duplicate", f"job {j} retires more than once "
+                f"(first close at {retire_end[j] / 1e3:.3f}ms)", e.ts))
+        retire_end[j] = max(retire_end.get(j, 0.0), e.end)
+    if require_complete:
+        for j in jobs_seen:
+            if j not in retire_end:
+                v.append(Violation(
+                    "retire-missing",
+                    f"job {j} appears on a slot track but never retires"))
+    for e in slot_evs:
+        j = _job(e)
+        if e.name == "retire" or j not in retire_end:
+            continue
+        t_ref = e.end if e.name in ("queued", "tool_wait") else e.ts
+        if t_ref > retire_end[j] + EPS:
+            v.append(Violation(
+                "retire-not-terminal",
+                f"{e.name} for job {j} on {e.track} after its retire "
+                f"closed at {retire_end[j] / 1e3:.3f}ms", t_ref))
+
+    # ---- admission: queue precedes the slot, prefill follows admission -
+    first_slot: Dict[int, float] = {}
+    for e in slot_evs:
+        j = _job(e)
+        first_slot[j] = min(first_slot.get(j, float("inf")), e.ts)
+    q_close: Dict[int, float] = {}
+    for e in queued:
+        j = _job(e)
+        if j is not None:
+            q_close[j] = min(q_close.get(j, float("inf")), e.end)
+    for j, t0 in sorted(first_slot.items()):
+        if j not in q_close:
+            v.append(Violation(
+                "admit-without-queue",
+                f"job {j} occupies a slot but has no queued span", t0))
+        elif q_close[j] > t0 + EPS:
+            v.append(Violation(
+                "admit-without-queue",
+                f"job {j} occupies a slot at {t0 / 1e3:.3f}ms before its "
+                f"queued span closes at {q_close[j] / 1e3:.3f}ms", t0))
+    admissions = sorted([e.end for e in queued] + [e.end for e in tool_waits]
+                        + [e.ts for e in swaps_in])
+    for p in prefills:
+        if not any(t <= p.ts + EPS for t in admissions):
+            v.append(Violation(
+                "prefill-without-queue",
+                "prefill with no admission event (queued / tool_wait / "
+                "swap_in) at or before its start", p.ts))
+
+    # ---- swapping: out before in, and never during a decode round ------
+    out_stack: Dict[int, List[float]] = {}
+    for e in sorted(swaps_out + swaps_in, key=lambda e: e.ts):
+        j = _job(e)
+        if j is None:
+            continue
+        if e.name == "swap_out":
+            out_stack.setdefault(j, []).append(e.ts)
+        elif not out_stack.get(j):
+            v.append(Violation(
+                "swap-in-without-out",
+                f"swap_in for job {j} with no prior swap_out", e.ts))
+        else:
+            t_out = out_stack[j].pop()
+            for d in decodes:
+                if _job(d) == j and d.end > t_out + EPS \
+                        and d.ts < e.ts - EPS:
+                    v.append(Violation(
+                        "decode-while-parked",
+                        f"decode_round for job {j} inside its swapped-out "
+                        f"window [{t_out / 1e3:.3f}, {e.ts / 1e3:.3f}]ms",
+                        d.ts))
+    for s in swaps_out:
+        row = _slot_row(s.track)
+        for d in decodes:
+            if _slot_row(d.track) == row and d.ts + EPS < s.ts < d.end - EPS:
+                v.append(Violation(
+                    "swap-during-decode",
+                    f"swap_out on {s.track} inside a decode_round "
+                    f"[{d.ts / 1e3:.3f}, {d.end / 1e3:.3f}]ms — rows may "
+                    "only move between rounds", s.ts))
+
+    # ---- weight refresh: round boundaries only -------------------------
+    for r in refreshes:
+        for d in decodes:
+            if d.ts + EPS < r.ts < d.end - EPS:
+                v.append(Violation(
+                    "refresh-mid-round",
+                    f"weight_refresh (version "
+                    f"{r.args.get('version', '?')}) inside a decode_round "
+                    f"[{d.ts / 1e3:.3f}, {d.end / 1e3:.3f}]ms — tokens of "
+                    "that round are no longer attributable to one version",
+                    r.ts))
+                break
+
+    # ---- copy-on-write: cows inside write windows ----------------------
+    for c in cows:
+        row = c.args.get("row")
+        in_decode = any(
+            _slot_row(d.track) == row and d.ts - EPS <= c.ts <= d.end + EPS
+            for d in decodes)
+        near_prefill = any(
+            c.ts - EPS <= p.end and p.ts <= c.ts + PREFILL_SLACK
+            for p in prefills)
+        if not in_decode and not near_prefill:
+            v.append(Violation(
+                "cow-outside-write",
+                f"cow on row {row} outside any write window (no decode "
+                "round on its slot, no prefill in flight or imminent) — "
+                "a copy with no write is a leak, a write with no copy "
+                "clobbers the shared block", c.ts))
+
+    # ---- sharing: first write after a shared tail must copy ------------
+    # Cluster shared_tail instants by leader row: G sharers produce G-1
+    # cows (the last writer sees refcount 1 and writes in place).
+    clusters: Dict[int, List[_Ev]] = {}
+    for s in shared:
+        lead = s.args.get("leader")
+        if lead is not None:
+            clusters.setdefault(int(lead), []).append(s)
+    for lead, members in sorted(clusters.items()):
+        t0 = max(m.ts for m in members)
+        rows = {int(m.args.get("row")) for m in members
+                if m.args.get("row") is not None} | {lead}
+        # a preempted sharer re-prefills privately (no cow owed), and a
+        # row that never decodes after t0 never writes: skip such clusters
+        if any(_job(s) is not None and s.ts > t0 - EPS
+               and _slot_row(s.track) in rows for s in swaps_out):
+            continue
+        if not all(any(_slot_row(d.track) == r and d.end > t0 - EPS
+                       for d in decodes) for r in rows):
+            continue
+        n_cows = sum(1 for c in cows
+                     if c.args.get("row") in rows and c.ts > t0 - EPS)
+        expected = len(rows) - 1
+        if n_cows < expected:
+            v.append(Violation(
+                "write-after-share-without-cow",
+                f"rows {sorted(rows)} share leader {lead}'s tail block and "
+                f"all decode after {t0 / 1e3:.3f}ms, but only {n_cows} cow "
+                f"event(s) follow (expected >= {expected}) — someone wrote "
+                "a still-shared block in place", t0))
+
+    v.sort(key=lambda x: x.t)
+    return v
+
+
+def check_trace_file(path: str,
+                     require_complete: bool = True) -> List[Violation]:
+    with open(path) as f:
+        obj = json.load(f)
+    return check_trace(obj, require_complete=require_complete)
+
+
+def _find_traces(target: str) -> List[str]:
+    if os.path.isdir(target):
+        found = sorted(glob.glob(os.path.join(target, "**", "*.trace.json"),
+                                 recursive=True),
+                       key=lambda p: os.path.getmtime(p))
+        return found[-1:]       # newest export
+    return [target]
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Replay exported Chrome traces against the scheduler's "
+                    "happens-before contract.")
+    ap.add_argument("target", help="a *.trace.json file, or a directory "
+                                   "(the newest *.trace.json under it)")
+    ap.add_argument("--allow-incomplete", action="store_true",
+                    help="don't require every job to retire (trace cut "
+                         "mid-stream)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    args = ap.parse_args(argv)
+
+    paths = _find_traces(args.target)
+    if not paths or not os.path.exists(paths[0]):
+        print(f"trace_check: no trace found at {args.target}",
+              file=sys.stderr)
+        return 2
+    total = 0
+    report: List[Tuple[str, List[Violation]]] = []
+    for path in paths:
+        try:
+            found = check_trace_file(
+                path, require_complete=not args.allow_incomplete)
+        except (OSError, ValueError) as e:
+            print(f"trace_check: cannot read {path}: {e}", file=sys.stderr)
+            return 2
+        report.append((path, found))
+        total += len(found)
+    if args.as_json:
+        print(json.dumps({p: [x.to_json() for x in f] for p, f in report},
+                         indent=2))
+    else:
+        for path, found in report:
+            status = "OK" if not found else f"{len(found)} violation(s)"
+            print(f"{path}: {status}")
+            for x in found:
+                print(f"  {x.format()}")
+    return 1 if total else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

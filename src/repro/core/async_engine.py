@@ -26,6 +26,7 @@ from typing import List, Optional, Sequence
 
 from repro import obs
 from repro.tools.background import BackgroundLoop as _BackgroundLoop
+from repro.tools.background import run_sync as _run_sync
 from repro.tools.registry import ToolCall, ToolRegistry, ToolResult
 
 
@@ -85,14 +86,10 @@ class AsyncToolExecutor:
 
     def execute_batch(self, batch_calls: Sequence[List[ToolCall]]
                       ) -> List[List[ToolResult]]:
-        try:
-            asyncio.get_running_loop()
-        except RuntimeError:
-            return asyncio.run(self.execute_batch_async(batch_calls))
-        # Called from inside a running loop (webui/serving path): hand the
-        # batch to the persistent background loop instead of asyncio.run.
-        return _BackgroundLoop.shared().run(
-            self.execute_batch_async(batch_calls))
+        # Always on the persistent background loop: works with or without a
+        # running loop on the calling thread, and keeps loop-bound state
+        # (the row semaphore) on the same loop the futures mode uses.
+        return _run_sync(self.execute_batch_async(batch_calls))
 
     # -------------------------------------------------------- futures mode
     def _loop_semaphore(self, loop) -> asyncio.Semaphore:
@@ -203,9 +200,4 @@ class SerialToolExecutor:
         async serving code: like the async executor, it detects a running
         event loop and routes through the persistent background loop instead
         of crashing in ``asyncio.run`` (the awaits stay sequential)."""
-        try:
-            asyncio.get_running_loop()
-        except RuntimeError:
-            return asyncio.run(self.execute_batch_async(batch_calls))
-        return _BackgroundLoop.shared().run(
-            self.execute_batch_async(batch_calls))
+        return _run_sync(self.execute_batch_async(batch_calls))

@@ -185,6 +185,7 @@ class _StreamMetrics:
         self.swap_out = r.counter("swap_out")
         self.swap_in = r.counter("swap_in")
         self.weight_refreshes = r.counter("weight_refreshes")
+        self.executor_degradations = r.counter("executor_degradations")
         self.cache_util = r.histogram("cache_utilization",
                                       bounds=self._UTIL_BOUNDS)
         self.decode_round = r.timer("decode_round_s")
@@ -305,15 +306,13 @@ class ContinuousScheduler:
         slots = [_Slot(row=i) for i in range(B)]
 
         first = [queue.popleft() for _ in range(B)]
-        session = self.engine.start([j.prompt_ids for j in first])
-        for slot, job in zip(slots, first):
-            slot.job, slot.key, slot.state = job, job.key, SlotState.ACTIVE
-            slot.turn_idx = 0
-
         by_future: Dict[object, _Slot] = {}
         m = _StreamMetrics(self.config.max_new_tokens)
         trc = obs.get().tracer
         if trc.enabled:
+            # stamped BEFORE engine.start so the admission (queued close)
+            # happens-before the first prefill span on the trace — the
+            # ordering trace_check asserts
             t_q = trc.now()
             for j in jobs:
                 j.enqueued_at = t_q
@@ -321,6 +320,10 @@ class ContinuousScheduler:
                 slot.admit_t = t_q
                 trc.complete("queue", "queued", job.enqueued_at, t_q,
                              job=job.index)
+        session = self.engine.start([j.prompt_ids for j in first])
+        for slot, job in zip(slots, first):
+            slot.job, slot.key, slot.state = job, job.key, SlotState.ACTIVE
+            slot.turn_idx = 0
         t_start = time.monotonic()
         retired: List[Trajectory] = []
         to_refill: List[_Slot] = []
@@ -582,6 +585,7 @@ class ContinuousScheduler:
             "swap_out": m.swap_out.value,
             "swap_in": m.swap_in.value,
             "weight_refreshes": m.weight_refreshes.value,
+            "executor_degradations": m.executor_degradations.value,
             "decode_round_p50_s": m.decode_round.percentile(50),
             "decode_round_p99_s": m.decode_round.percentile(99),
         }
@@ -866,7 +870,11 @@ class ContinuousScheduler:
         by parked slots and swapped-out records)."""
         try:
             results: List[ToolResult] = fut.result()
-        except Exception as e:  # executor bug — degrade to error observations
+        # An executor-side failure (not a tool error — those come back as
+        # ok=False results) degrades to error observations so the stream
+        # finishes; rollout/executor_degradations makes it visible.
+        except Exception as e:  # lint: disable=broad-except
+            m.executor_degradations.add()
             results = [ToolResult(c.name, f"ERROR: {type(e).__name__}: {e}",
                                   ok=False, call_id=c.call_id)
                        for c in calls]

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
 from repro.core.grpo import GRPOConfig, make_grpo_train_step
 from repro.distributed.sharding import ShardingRules, use_sharding_rules
@@ -338,7 +339,11 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         try:
             extrap = extrapolate_costs(cfg, shape_name, rules, kind,
                                        micro_batch=v_mb)
-        except Exception as e:
+        # Any compile/lowering failure in the roofline extrapolation only
+        # costs the sweep that one table; degrade to the raw HLO cost and
+        # count it so a broken extrapolator is visible on the dashboards.
+        except Exception as e:  # lint: disable=broad-except
+            obs.get().registry.counter("dryrun/extrap_errors").add()
             traceback.print_exc()
             extrap = {"error": f"{type(e).__name__}: {e}"}
     if extrap and "flops" in extrap:
@@ -418,7 +423,11 @@ def main():
                 print(f"[dryrun] {label} ...", flush=True)
                 try:
                     res = run_one(arch, shape, mp, args.variant)
-                except Exception as e:
+                # One (arch, shape, mesh) combination failing must not kill
+                # the rest of the sweep: record an error result (it counts
+                # toward the exit code) and move on.
+                except Exception as e:  # lint: disable=broad-except
+                    obs.get().registry.counter("dryrun/run_errors").add()
                     traceback.print_exc()
                     res = {"arch": arch, "shape": shape,
                            "mesh": "2x16x16" if mp else "16x16",

@@ -897,10 +897,16 @@ class GenerationEngine:
                 a.prefix.insert(toks,
                                 [int(b) for b in a.table[row, :n_full]])
         if followers:
+            o = obs.get()
             for row, lead, n in followers:
                 a.map_shared(row, [int(b)
                                    for b in a.table[lead, :a.blocks_for(n)]])
                 session.lengths[row] += n
+                if o.tracing:
+                    # the write-after-share contract trace_check verifies:
+                    # G sharers must produce G-1 cow events before decoding
+                    o.tracer.instant("cache", "shared_tail", row=row,
+                                     leader=lead)
             rows = jnp.asarray([f[0] for f in followers])
             leads = jnp.asarray([f[1] for f in followers])
             session.last_logits = session.last_logits.at[rows].set(

@@ -53,3 +53,15 @@ class BackgroundLoop:
                 "blocking tool call from the tool-executor loop itself; "
                 "await the async variant instead")
         return self.submit(coro).result()
+
+
+def run_sync(coro):
+    """The one blocking bridge from sync code to a coroutine.
+
+    Replaces the ``try: get_running_loop / except: asyncio.run`` dance at
+    every call site: safe whether the calling thread has a running loop
+    (webui/serving handlers) or not (scripts, tests), and always executes
+    on the same persistent loop the in-flight executor futures live on —
+    so tool-side state (semaphores, sessions) never straddles two loops.
+    """
+    return BackgroundLoop.shared().run(coro)

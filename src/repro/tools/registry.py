@@ -134,7 +134,9 @@ class ToolRegistry:
                              f"out after {self._timeout_of(call.name)}s",
                              ok=False, latency_s=time.monotonic() - t0,
                              call_id=call.call_id, timeout=True)
-        except Exception as e:  # tool errors are observations, not crashes
+        # Tool errors are observations, not crashes: the failure text becomes
+        # the model's observation, and _record counts it on tool/errors.
+        except Exception as e:  # lint: disable=broad-except
             res = ToolResult(call.name, f"ERROR: {type(e).__name__}: {e}",
                              ok=False, latency_s=time.monotonic() - t0,
                              call_id=call.call_id)
@@ -167,5 +169,5 @@ class ToolRegistry:
         :meth:`call_async` (the old direct call had no timeout on either),
         and so it is safe to call from code already inside an event loop.
         """
-        from repro.tools.background import BackgroundLoop
-        return BackgroundLoop.shared().run(self.call_async(call))
+        from repro.tools.background import run_sync
+        return run_sync(self.call_async(call))

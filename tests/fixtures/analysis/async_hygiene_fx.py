@@ -1,0 +1,49 @@
+"""Seeded async-hygiene violations plus near-miss negatives.
+
+Never imported or run — parsed by tests/test_analysis.py, which expects
+exactly the lines tagged ``# seed`` to be flagged (when linted under a
+``src/`` relative path) and nothing else.
+"""
+import asyncio
+import time
+
+
+async def bad_sleep():
+    time.sleep(0.1)  # seed
+
+
+async def bad_run():
+    asyncio.run(bad_sleep())  # seed
+
+
+async def bad_result(fut):
+    return fut.result()  # seed
+
+
+def fire_and_forget():
+    asyncio.create_task(bad_sleep())  # seed
+
+
+def sync_entry():
+    asyncio.run(bad_sleep())  # seed
+
+
+async def ok_await():
+    await asyncio.sleep(0.1)
+
+
+async def ok_result_with_timeout(fut):
+    # near miss: a timeout-bounded result() is a deliberate blocking wait,
+    # not the no-arg deadlock pattern the rule targets
+    return fut.result(5)
+
+
+async def ok_nested_sync_helper():
+    def helper():
+        time.sleep(0.1)     # near miss: runs in the helper's own context
+    return helper
+
+
+def ok_kept_handle():
+    task = asyncio.create_task(bad_sleep())
+    return task

@@ -1,0 +1,29 @@
+"""Seeded broad-except violations plus near-miss negatives.
+
+Never imported or run — parsed by tests/test_analysis.py, which expects
+exactly the lines tagged ``# seed`` to be flagged, and the suppressed
+catch-all to land in the suppressed bucket.
+"""
+
+
+def catches(fn):
+    try:
+        fn()
+    except Exception:  # seed
+        pass
+    try:
+        fn()
+    except (ValueError, BaseException):  # seed
+        pass
+    try:
+        fn()
+    except:  # noqa: E722 -- # seed
+        pass
+    try:
+        fn()
+    except ValueError:
+        pass
+    try:
+        fn()
+    except Exception:  # lint: disable=broad-except (deliberate: fixture)
+        pass

@@ -1,0 +1,53 @@
+"""Seeded jit-purity violations plus near-miss negatives.
+
+Never imported or run — parsed by tests/test_analysis.py, which expects
+exactly the lines tagged ``# seed`` to be flagged and nothing else.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@jax.jit
+def bad_decorated(x):
+    return float(x)  # seed
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def bad_partial(n, x):
+    return x.item()  # seed
+
+
+def _loop_body(c):
+    return np.asarray(c) + 1  # seed
+
+
+def run_loop(x):
+    return lax.while_loop(lambda c: c.sum() < 10, _loop_body, x)
+
+
+def _referenced(x):
+    print(x)  # seed
+    return x
+
+
+run_referenced = jax.jit(_referenced)
+
+
+def run_cond(p, x):
+    return lax.cond(p, lambda v: int(v), lambda v: v, x)  # seed
+
+
+def ok_untraced(x):
+    # near miss: same calls, but nothing traces this function
+    print(x)
+    return float(x)
+
+
+@jax.jit
+def ok_traced(x):
+    # near miss: jnp stays on device; reductions are fine under jit
+    return jnp.asarray(x) + x.sum()

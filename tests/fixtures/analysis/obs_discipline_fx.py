@@ -1,0 +1,29 @@
+"""Seeded obs-discipline violations plus near-miss negatives.
+
+Never imported or run — parsed by tests/test_analysis.py, which expects
+exactly the lines tagged ``# seed`` to be flagged and nothing else.
+"""
+
+
+class Recorder:
+    def __init__(self, reg):
+        self.c1 = reg.counter("rolout/typo_namespace")  # seed
+        self.c2 = reg.counter("rollout/Bad-Segment")  # seed
+        self.c3 = reg.counter("rounds")  # seed
+        self.ok = reg.counter("rollout/ok_name")
+        self.last_stats = {}
+        self.stats = {"calls": 0}  # seed
+
+    def record(self, n):
+        self.last_stats["tokens"] = n  # seed
+        self.stats["calls"] += n  # seed
+
+    def _finalize_stats(self, n):
+        # near miss: the finalizer is the one legitimate assembly point
+        self.last_stats = {"tokens": float(n)}
+        self.last_stats["wall_s"] = 0.0
+        return self.last_stats
+
+    def publish(self):
+        # near miss: re-exporting the finalized dict is fine anywhere
+        self.last_stats = self._finalize_stats(0)

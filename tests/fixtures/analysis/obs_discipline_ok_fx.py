@@ -1,0 +1,13 @@
+"""obs-discipline negatives: bare instrument names are legitimate on a
+child registry that forwards under a ``parent_prefix`` (the
+``_StreamMetrics`` pattern).  Parsed by tests/test_analysis.py; expects
+zero findings."""
+from repro import obs
+
+
+class StreamMetrics:
+    def __init__(self):
+        reg = obs.MetricsRegistry(parent=obs.get().registry,
+                                  parent_prefix="rollout/")
+        self.rounds = reg.counter("rounds")
+        self.gen_s = reg.timer("gen_s")

@@ -1,0 +1,30 @@
+"""Seeded resource-pairing violations plus near-miss negatives.
+
+Never imported or run — parsed by tests/test_analysis.py, which expects
+exactly the lines tagged ``# seed`` to be flagged and nothing else.
+"""
+
+
+class Leaky:
+    def sample(self, store, version):
+        store.pin_version(version)  # seed
+        return version
+
+    def admit(self, alloc, row, blocks):
+        alloc.map_shared(row, blocks)  # seed
+
+
+class Balanced:
+    # near misses: every acquire below has its release named in this module
+    def kick(self, executor, calls):
+        return executor.submit(calls)
+
+    def drain(self, executor):
+        return executor.drain_ready()
+
+    def profile(self, prof, path):
+        prof.start_trace(path)
+        try:
+            return path
+        finally:
+            prof.stop_trace()

@@ -1,0 +1,305 @@
+"""repro.analysis: lint engine, rules against seeded fixtures, baseline
+semantics, repo cleanliness gate, and the trace_check happens-before
+detector on synthetic traces."""
+import json
+import pathlib
+
+import pytest
+
+from repro.analysis import (Baseline, Finding, LintEngine, Module,
+                            check_trace, check_trace_file, default_rules)
+from repro.analysis.rules import (AsyncHygieneRule, BroadExceptRule,
+                                  JitPurityRule, ObsDisciplineRule,
+                                  ResourcePairingRule)
+from repro.analysis import trace_check
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = ROOT / "tests" / "fixtures" / "analysis"
+
+
+def load_fixture(name, rel=None):
+    path = FIXTURES / name
+    return Module(str(path), rel or f"tests/fixtures/analysis/{name}",
+                  path.read_text())
+
+
+def seed_lines(name):
+    """Fixture lines tagged ``# seed`` are the exact expected findings."""
+    return sorted(i for i, line in enumerate(
+        (FIXTURES / name).read_text().splitlines(), start=1)
+        if line.rstrip().endswith("# seed"))
+
+
+# --------------------------------------------------------------- rule sweeps
+@pytest.mark.parametrize("rule,fixture,rel", [
+    (AsyncHygieneRule(), "async_hygiene_fx.py", "src/async_hygiene_fx.py"),
+    (JitPurityRule(), "jit_purity_fx.py", None),
+    (ResourcePairingRule(), "resource_pairing_fx.py", None),
+    (ObsDisciplineRule(), "obs_discipline_fx.py", None),
+    (BroadExceptRule(), "broad_except_fx.py", None),
+], ids=lambda x: getattr(x, "name", None) or str(x))
+def test_rule_flags_exactly_the_seeded_lines(rule, fixture, rel):
+    kept, _ = LintEngine([rule]).lint_module(load_fixture(fixture, rel))
+    assert sorted(f.line for f in kept) == seed_lines(fixture)
+    assert all(f.rule == rule.name for f in kept)
+
+
+def test_broad_except_suppression_lands_in_suppressed_bucket():
+    kept, suppressed = LintEngine([BroadExceptRule()]).lint_module(
+        load_fixture("broad_except_fx.py"))
+    assert len(suppressed) == 1
+    assert suppressed[0].rule == "broad-except"
+    assert all(s.line not in {f.line for f in kept} for s in suppressed)
+
+
+def test_obs_discipline_allows_bare_names_on_prefixed_child_registry():
+    kept, _ = LintEngine([ObsDisciplineRule()]).lint_module(
+        load_fixture("obs_discipline_ok_fx.py"))
+    assert kept == []
+
+
+def test_async_hygiene_asyncio_run_only_flagged_in_library_paths():
+    rule = AsyncHygieneRule()
+    in_src, _ = LintEngine([rule]).lint_module(
+        load_fixture("async_hygiene_fx.py", "src/async_hygiene_fx.py"))
+    in_tests, _ = LintEngine([rule]).lint_module(
+        load_fixture("async_hygiene_fx.py"))
+    delta = {f.line for f in in_src} - {f.line for f in in_tests}
+    assert len(delta) == 1      # sync_entry's asyncio.run, src/-only
+
+
+# ------------------------------------------------------ suppression mechanics
+def _module(src, rel="src/x.py"):
+    return Module("x.py", rel, src)
+
+
+def test_inline_suppression_requires_matching_rule_name():
+    src = ("try:\n    pass\n"
+           "except Exception:  # lint: disable=jit-purity\n    pass\n")
+    kept, suppressed = LintEngine([BroadExceptRule()]).lint_module(
+        _module(src))
+    assert len(kept) == 1 and suppressed == []
+
+
+def test_whole_file_suppression():
+    src = ("# lint: disable-file=broad-except\n"
+           "try:\n    pass\nexcept Exception:\n    pass\n"
+           "try:\n    pass\nexcept BaseException:\n    pass\n")
+    kept, suppressed = LintEngine([BroadExceptRule()]).lint_module(
+        _module(src))
+    assert kept == [] and len(suppressed) == 2
+
+
+# ------------------------------------------------------------------ baseline
+def test_baseline_roundtrip_and_budget(tmp_path):
+    f = Finding("broad-except", "src/a.py", 12, "msg", "except Exception:")
+    b = Baseline.from_findings([f, f])
+    p = tmp_path / "baseline.json"
+    b.save(str(p))
+    loaded = Baseline.load(str(p))
+    # same text on a different line stays grandfathered (line-drift immune)
+    drifted = Finding("broad-except", "src/a.py", 99, "msg",
+                      "except Exception:")
+    third = Finding("broad-except", "src/a.py", 120, "msg",
+                    "except Exception:")
+    new, old = loaded.split([f, drifted, third])
+    assert old == [f, drifted]          # budget of 2 consumed
+    assert new == [third]               # a THIRD identical violation fails
+    fresh = Finding("broad-except", "src/b.py", 1, "msg", "except Exception:")
+    assert loaded.split([fresh])[0] == [fresh]
+
+
+def test_baseline_missing_file_is_empty():
+    b = Baseline.load(str(ROOT / "no" / "such" / "baseline.json"))
+    f = Finding("r", "p", 1, "m", "t")
+    assert b.split([f]) == ([f], [])
+
+
+# ------------------------------------------------------------- the repo gate
+def test_repo_is_lint_clean_modulo_checked_in_baseline():
+    """The acceptance criterion as a test: default rules over src/,
+    benchmarks/ and scripts/ report zero unsuppressed, non-baselined
+    findings."""
+    baseline = Baseline.load(str(ROOT / "scripts" / "lint_baseline.json"))
+    rep = LintEngine(default_rules(), baseline=baseline).run(
+        ["src", "benchmarks", "scripts"], root=str(ROOT))
+    assert rep.errors == []
+    assert [f.format() for f in rep.findings] == []
+
+
+# ------------------------------------------------------------- trace_check
+class _Trace:
+    """Synthetic Chrome-trace builder (times in µs)."""
+
+    def __init__(self):
+        self.ev, self.tids = [], {}
+
+    def _tid(self, track):
+        if track not in self.tids:
+            t = self.tids[track] = len(self.tids)
+            self.ev.append({"ph": "M", "name": "thread_name", "pid": 0,
+                            "tid": t, "ts": 0, "args": {"name": track}})
+        return self.tids[track]
+
+    def span(self, track, name, t0, t1, **args):
+        e = {"ph": "X", "name": name, "pid": 0, "tid": self._tid(track),
+             "ts": float(t0), "dur": float(t1 - t0)}
+        if args:
+            e["args"] = args
+        self.ev.append(e)
+        return self
+
+    def inst(self, track, name, t, **args):
+        e = {"ph": "i", "name": name, "pid": 0, "tid": self._tid(track),
+             "ts": float(t), "s": "t"}
+        if args:
+            e["args"] = args
+        self.ev.append(e)
+        return self
+
+    def obj(self):
+        return {"traceEvents": list(self.ev)}
+
+
+def clean_trace():
+    t = _Trace()
+    t.span("queue", "queued", 0, 10, job=0)
+    t.span("queue", "queued", 0, 10, job=1)
+    t.span("engine", "prefill", 12, 20, tokens=32, rows=2)
+    t.inst("sched", "weight_refresh", 21, version=1)
+    t.span("slot0", "decode_round", 22, 30, turn=0, job=0)
+    t.span("slot1", "decode_round", 22, 30, turn=0, job=1)
+    t.span("slot0", "tool_wait", 31, 40, job=0, obs_tokens=4)
+    t.span("slot1", "tool_wait", 31, 40, job=1, obs_tokens=4)
+    t.span("engine", "prefill", 42, 45, tokens=8, rows=2)
+    t.span("slot0", "decode_round", 46, 55, turn=1, job=0)
+    t.span("slot1", "decode_round", 46, 55, turn=1, job=1)
+    t.span("slot0", "retire", 10, 60, job=0, reason="answer", finished=True)
+    t.span("slot1", "retire", 10, 60, job=1, reason="answer", finished=True)
+    return t
+
+
+def codes(obj, **kw):
+    return {v.code for v in check_trace(obj, **kw)}
+
+
+def test_clean_trace_has_no_violations():
+    assert check_trace(clean_trace().obj()) == []
+
+
+def test_schema_problems_short_circuit():
+    assert codes({"traceEvents": [{"ph": "Z", "name": "x"}]}) == {"schema"}
+
+
+def test_retire_missing_only_when_complete_required():
+    t = _Trace()
+    t.span("queue", "queued", 0, 10, job=0)
+    t.span("engine", "prefill", 12, 20)
+    t.span("slot0", "decode_round", 22, 30, turn=0, job=0)
+    assert codes(t.obj()) == {"retire-missing"}
+    assert codes(t.obj(), require_complete=False) == set()
+
+
+def test_retire_duplicate():
+    t = clean_trace()
+    t.span("slot0", "retire", 10, 61, job=0, reason="answer", finished=True)
+    assert "retire-duplicate" in codes(t.obj())
+
+
+def test_retire_is_terminal():
+    t = clean_trace()
+    t.span("slot0", "decode_round", 62, 65, turn=2, job=0)
+    assert "retire-not-terminal" in codes(t.obj())
+
+
+def test_admission_requires_queue():
+    t = clean_trace()
+    t.ev = [e for e in t.ev
+            if not (e["name"] == "queued" and e.get("args", {}).get("job") == 1)]
+    assert "admit-without-queue" in codes(t.obj())
+
+
+def test_prefill_requires_prior_admission():
+    t = clean_trace()
+    t.span("engine", "prefill", 2, 5, tokens=16, rows=1)
+    assert "prefill-without-queue" in codes(t.obj())
+
+
+def test_swap_in_requires_prior_swap_out():
+    t = clean_trace()
+    t.inst("slot0", "swap_in", 33, job=0)
+    assert "swap-in-without-out" in codes(t.obj())
+
+
+def test_no_decode_inside_swapped_out_window():
+    t = clean_trace()                     # decode for job 0 spans [46, 55]
+    t.inst("slot0", "swap_out", 41, job=0)
+    t.inst("slot1", "swap_in", 58, job=0)
+    assert "decode-while-parked" in codes(t.obj())
+
+
+def test_swap_out_only_between_rounds():
+    t = clean_trace()
+    t.inst("slot0", "swap_out", 25, job=0)   # inside decode_round [22, 30]
+    assert "swap-during-decode" in codes(t.obj())
+
+
+def test_weight_refresh_only_at_round_boundaries():
+    t = clean_trace()
+    t.inst("sched", "weight_refresh", 25, version=2)
+    assert "refresh-mid-round" in codes(t.obj())
+
+
+def test_cow_needs_a_write_window():
+    t = clean_trace()
+    t.inst("cache", "cow", 500_000, row=0, blocks=1)
+    assert "cow-outside-write" in codes(t.obj())
+
+
+def test_shared_tail_write_without_cow_is_flagged():
+    t = clean_trace()
+    t.inst("cache", "shared_tail", 15, row=1, leader=0)
+    assert "write-after-share-without-cow" in codes(t.obj())
+
+
+def test_shared_tail_with_cow_is_clean():
+    t = clean_trace()
+    t.inst("cache", "shared_tail", 15, row=1, leader=0)
+    t.inst("cache", "cow", 24, row=1, blocks=1)   # inside slot1's round
+    assert check_trace(t.obj()) == []
+
+
+def test_shared_tail_cluster_expects_g_minus_one_cows():
+    # 3-way share (leader 0, followers 1 and 2): 2 cows suffice — the last
+    # writer writes in place at refcount 1
+    t = clean_trace()
+    t.span("queue", "queued", 0, 10, job=2)
+    t.span("slot2", "decode_round", 22, 30, turn=0, job=2)
+    t.span("slot2", "retire", 10, 60, job=2, reason="answer", finished=True)
+    t.inst("cache", "shared_tail", 15, row=1, leader=0)
+    t.inst("cache", "shared_tail", 15, row=2, leader=0)
+    t.inst("cache", "cow", 24, row=1, blocks=1)
+    incomplete = codes(t.obj())
+    assert "write-after-share-without-cow" in incomplete
+    t.inst("cache", "cow", 25, row=2, blocks=1)
+    assert check_trace(t.obj()) == []
+
+
+def test_preempted_sharer_owes_no_cow():
+    t = clean_trace()
+    t.inst("cache", "shared_tail", 15, row=1, leader=0)
+    t.inst("slot1", "swap_out", 32, job=1)     # between rounds
+    t.inst("slot1", "swap_in", 44, job=1)      # re-prefills privately
+    assert "write-after-share-without-cow" not in codes(t.obj())
+
+
+def test_check_trace_file_and_cli(tmp_path):
+    p = tmp_path / "clean_0001.trace.json"
+    p.write_text(json.dumps(clean_trace().obj()))
+    assert check_trace_file(str(p)) == []
+    assert trace_check.main([str(tmp_path)]) == 0
+    bad = clean_trace()
+    bad.inst("sched", "weight_refresh", 25, version=2)
+    p.write_text(json.dumps(bad.obj()))
+    assert trace_check.main([str(p)]) == 1
+    assert trace_check.main([str(tmp_path / "missing.trace.json")]) == 2
